@@ -1,0 +1,84 @@
+"""Shared helpers for the paper-reproduction benchmarks (Figures 6/7/8,
+Table 2, Figure 15).  Each benchmark prints CSV rows:
+
+    benchmark,variant,task,metric,value
+
+and returns the rows so `benchmarks.run` can aggregate them."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.core.api import CostModel, Metrics
+from repro.core.baselines import (NuPSStatic, SelectiveReplicationSSP,
+                                  StaticFullReplication, StaticPartitioning)
+from repro.core.manager import AdaPM
+from repro.core.simulator import (SimConfig, Workload, simulate,
+                                  single_node_epoch_time)
+from repro.data.workloads import make_workload
+
+TASKS = ("KGE", "WV", "MF", "CTR", "GNN")
+
+# six NuPS configurations, mirroring the paper's quasi-random search over
+# (hot-set size, relocation offset) (§D)
+NUPS_CONFIGS = [
+    (0.0005, 8), (0.002, 32), (0.01, 64),
+    (0.05, 128), (0.002, 512), (0.01, 16),
+]
+
+
+def default_cost() -> CostModel:
+    return CostModel()
+
+
+def make_policy(name: str, n_nodes: int, cost: CostModel,
+                wl: Workload, **kw):
+    if name == "adapm":
+        return AdaPM(n_nodes, cost, **kw)
+    if name == "adapm_norel":
+        return AdaPM(n_nodes, cost, relocation=False, **kw)
+    if name == "adapm_norep":
+        return AdaPM(n_nodes, cost, replication=False, **kw)
+    if name == "adapm_immediate":
+        return AdaPM(n_nodes, cost, immediate_action=True, **kw)
+    if name == "full_replication":
+        return StaticFullReplication(n_nodes, cost, wl.n_keys)
+    if name == "static_partitioning":
+        return StaticPartitioning(n_nodes, cost)
+    if name == "ssp":
+        return SelectiveReplicationSSP(n_nodes, cost,
+                                       staleness_bound=kw.get("bound", 20))
+    if name == "essp":
+        return SelectiveReplicationSSP(n_nodes, cost, staleness_bound=None)
+    if name.startswith("nups"):
+        idx = int(name.split("_")[1])
+        hot_frac, off = NUPS_CONFIGS[idx]
+        return NuPSStatic(n_nodes, cost, wl.n_keys, wl.hot_keys(hot_frac),
+                          reloc_offset=off)
+    raise KeyError(name)
+
+
+def run_one(policy_name: str, task: str, n_nodes: int = 8, wpn: int = 4,
+            scale: float = 1.0, signal_offset: int = 100,
+            cost: Optional[CostModel] = None, **kw) -> Metrics:
+    cost = cost or default_cost()
+    wl = make_workload(task, n_nodes=n_nodes, wpn=wpn, scale=scale)
+    pol = make_policy(policy_name, n_nodes, cost, wl, **kw)
+    return simulate(pol, wl, SimConfig(signal_offset=signal_offset))
+
+
+def speedup_vs_single_node(task: str, metrics: Metrics, n_nodes: int = 8,
+                           wpn: int = 4, scale: float = 1.0,
+                           cost: Optional[CostModel] = None) -> float:
+    cost = cost or default_cost()
+    wl = make_workload(task, n_nodes=n_nodes, wpn=wpn, scale=scale)
+    t1 = single_node_epoch_time(wl, cost)
+    return t1 / max(metrics.epoch_time, 1e-12)
+
+
+def emit(rows: List[str], benchmark: str, variant: str, task: str,
+         metric: str, value) -> None:
+    row = f"{benchmark},{variant},{task},{metric},{value}"
+    print(row)
+    rows.append(row)

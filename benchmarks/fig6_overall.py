@@ -1,0 +1,47 @@
+"""Figure 6: overall performance of AdaPM vs single node, manually tuned
+NuPS (6 configs, best/worst reported), standard PM (full replication,
+static partitioning), and single-technique ablations — on all five tasks.
+
+Paper claims validated here (EXPERIMENTS.md §Paper-validation):
+  * AdaPM achieves good speedups out of the box on every task;
+  * AdaPM matches/outperforms the best NuPS configuration, while NuPS's
+    spread between best and worst configuration is large (tuning burden);
+  * static partitioning is slower than the single node;
+  * full replication over-communicates (staleness) or OOMs on big models;
+  * AdaPM w/o replication is poor everywhere; w/o relocation is fine
+    except under locality (MF).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from .common import (NUPS_CONFIGS, TASKS, default_cost, emit, run_one,
+                     speedup_vs_single_node)
+
+VARIANTS = (["adapm", "adapm_norel", "adapm_norep", "full_replication",
+             "static_partitioning", "essp"]
+            + [f"nups_{i}" for i in range(len(NUPS_CONFIGS))])
+
+
+def run(scale: float = 0.5, n_nodes: int = 8, wpn: int = 4) -> List[str]:
+    rows: List[str] = []
+    for task in TASKS:
+        for variant in VARIANTS:
+            m = run_one(variant, task, n_nodes=n_nodes, wpn=wpn, scale=scale)
+            sp = speedup_vs_single_node(task, m, n_nodes=n_nodes, wpn=wpn,
+                                        scale=scale)
+            emit(rows, "fig6", variant, task, "epoch_time_s",
+                 round(m.epoch_time, 4))
+            emit(rows, "fig6", variant, task, "speedup", round(sp, 2))
+            emit(rows, "fig6", variant, task, "gb_per_node",
+                 round(m.bytes_per_node / 1e9, 4))
+            emit(rows, "fig6", variant, task, "remote_frac",
+                 round(m.remote_fraction, 5))
+            emit(rows, "fig6", variant, task, "staleness_ms",
+                 round(m.mean_staleness * 1e3, 3))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

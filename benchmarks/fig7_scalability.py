@@ -1,0 +1,33 @@
+"""Figure 7: scalability of AdaPM vs NuPS on 2/4/8/16 nodes (KGE, WV, MF).
+
+Claims validated: near-linear raw speedups for AdaPM; AdaPM's remote-access
+share stays ~0 while NuPS's grows with the node count (relocation
+conflicts, §5.7)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from .common import default_cost, emit, run_one, speedup_vs_single_node
+
+NODES = (2, 4, 8, 16)
+TASKS3 = ("KGE", "WV", "MF")
+
+
+def run(scale: float = 0.35, wpn: int = 4) -> List[str]:
+    rows: List[str] = []
+    for task in TASKS3:
+        for n in NODES:
+            for variant in ("adapm", "nups_2"):
+                m = run_one(variant, task, n_nodes=n, wpn=wpn, scale=scale)
+                sp = speedup_vs_single_node(task, m, n_nodes=n, wpn=wpn,
+                                            scale=scale)
+                emit(rows, "fig7", variant, task, f"speedup_n{n}",
+                     round(sp, 2))
+                emit(rows, "fig7", variant, task, f"remote_frac_n{n}",
+                     round(m.remote_fraction, 5))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

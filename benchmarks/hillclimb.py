@@ -1,0 +1,83 @@
+"""Reproducible §Perf hillclimb ladders for the three selected pairs.
+
+Runs every iteration of each ladder (lower + compile + collective-byte
+measurement) and prints the before/after table that EXPERIMENTS.md §Perf
+records.  ~15 compiles, a few minutes on CPU.
+
+Run:  PYTHONPATH=src:. python -m benchmarks.hillclimb [--out results.json]
+"""
+
+import argparse
+import json
+
+# dryrun sets the 512-device XLA flag at import time (must precede jax)
+from repro.launch.dryrun import dryrun_one
+
+
+LADDERS = {
+    ("nemotron-4-15b", "train_4k"): [
+        ("baseline (naive ZeRO everywhere, GSPMD loss)", {}),
+        ("it1: un-ZeRO embed/head (kill logits partial-sum AR)",
+         dict(zero_embed_head=False)),
+        ("it3: shard_map vocab-parallel CE (kill dlogits gather)",
+         dict(zero_embed_head=False, vp_loss=True)),
+        ("it4: intent-managed embedding (paper technique)",
+         dict(zero_embed_head=False, vp_loss=True, pm_miss_capacity=8192)),
+        ("it6: auto-ZeRO (weights TP-only when they fit)",
+         dict(zero_embed_head=False, vp_loss=True, pm_miss_capacity=8192,
+              zero_layers=None)),
+        ("it5: remat dots (compute term: 4x -> ~3x fwd)",
+         dict(zero_embed_head=False, vp_loss=True, pm_miss_capacity=8192,
+              zero_layers=None, remat_policy="dots")),
+    ],
+    ("qwen3-moe-30b-a3b", "train_4k"): [
+        ("baseline", {}),
+        ("it1: un-ZeRO embed/head", dict(zero_embed_head=False)),
+        ("it3: shard_map vocab-parallel CE",
+         dict(zero_embed_head=False, vp_loss=True)),
+        ("it4: intent-managed embedding",
+         dict(zero_embed_head=False, vp_loss=True, pm_miss_capacity=8192)),
+        ("it6: auto-ZeRO",
+         dict(zero_embed_head=False, vp_loss=True, pm_miss_capacity=8192,
+              zero_layers=None)),
+    ],
+    ("whisper-medium", "prefill_32k"): [
+        ("baseline", {}),
+        ("it1a: un-ZeRO embed/head (refuted for whisper: V=51865 "
+         "never sharded)", dict(zero_embed_head=False)),
+        ("it1b: last-position-only head matmul",
+         dict(zero_embed_head=False, prefill_last_only=True)),
+        ("it2: pad vocab to shard the head (refuted: keep off)",
+         dict(zero_embed_head=False, prefill_last_only=True,
+              pad_vocab=True)),
+    ],
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="benchmarks/results/hillclimb.json")
+    args = ap.parse_args(argv)
+    results = []
+    for (arch, shape), ladder in LADDERS.items():
+        print(f"\n### {arch} x {shape}")
+        prev = None
+        for label, opts in ladder:
+            rec = dryrun_one(arch, shape, verbose=False, **opts)
+            assert rec["status"] == "ok", rec
+            gb = rec["collective_bytes"] / 1e9
+            delta = "" if prev is None else f"  ({prev/gb:5.1f}x vs prev)"
+            print(f"  {gb:9.2f} GB/dev collective  {label}{delta}")
+            results.append({"arch": arch, "shape": shape, "label": label,
+                            **{k: rec[k] for k in
+                               ("collective_bytes",
+                                "collective_bytes_per_op", "flops_raw",
+                                "memory", "compile_s")}})
+            prev = gb
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks: interpret-mode Pallas correctness timing plus
+the pure-jnp oracle (the CPU-speed reference; real perf is a TPU property,
+see §Roofline for the bandwidth-bound analysis)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> List[str]:
+    rows: List[str] = []
+    rng = np.random.default_rng(0)
+    for (V, D, n) in [(4096, 512, 256), (16384, 1024, 512)]:
+        table = jnp.asarray(rng.normal(size=(V, D)), dtype=jnp.float32)
+        accum = jnp.ones((V, D), dtype=jnp.float32)
+        ids = jnp.asarray(rng.choice(V, size=(n,), replace=False),
+                          dtype=jnp.int32)
+        grads = jnp.asarray(rng.normal(size=(n, D)), dtype=jnp.float32)
+        us_ref = _time(lambda: ref.embed_gather_ref(table, ids))
+        rows.append(f"kernels,gather_ref,V{V}xD{D}xn{n},us_per_call,"
+                    f"{us_ref:.1f}")
+        us_ref2 = _time(lambda: ref.adagrad_row_update_ref(
+            table, accum, ids, grads))
+        rows.append(f"kernels,adagrad_ref,V{V}xD{D}xn{n},us_per_call,"
+                    f"{us_ref2:.1f}")
+        # analytic TPU bound: bytes over HBM bandwidth (gather: read+write
+        # n*D; adagrad: 2 reads + 2 writes of n*D + grads read)
+        gb = n * D * 4 * 2
+        rows.append(f"kernels,gather_tpu_bound,V{V}xD{D}xn{n},us_roofline,"
+                    f"{gb / 819e9 * 1e6:.2f}")
+        ab = n * D * 4 * 5
+        rows.append(f"kernels,adagrad_tpu_bound,V{V}xD{D}xn{n},us_roofline,"
+                    f"{ab / 819e9 * 1e6:.2f}")
+    for r in rows:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,284 @@
+"""Roofline analysis (deliverable g).
+
+Three terms per (arch x shape x mesh), TPU v5e constants:
+
+    compute    = FLOPs_per_device / 197 TFLOP/s (bf16)
+    memory     = HBM_bytes_per_device / 819 GB/s
+    collective = collective_bytes_per_device / 50 GB/s (ICI link)
+
+Methodology (EXPERIMENTS.md §Dry-run): XLA's ``cost_analysis()`` counts
+while bodies once (calibrated in-repo), so scanned layer stacks are
+under-counted ~L-fold.  Collective bytes therefore come from the dry-run's
+execution-count-aware HLO parser (`repro.launch.dryrun.collective_bytes`);
+compute/memory come from the analytic model below (stated formulas, exact
+for the dominant matmul terms), with the raw cost_analysis numbers reported
+alongside for reference.
+
+MODEL_FLOPS = 6*N*T (dense) / 6*N_active*T (MoE): the "useful" floor.  The
+ratio MODEL_FLOPS / HLO_FLOPS exposes remat recompute (~4/3 for our
+remat-everything policy) and attention/scan overhead.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, InputShape
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+BYTES_PARAM = 2            # bf16
+BYTES_ACT = 2
+
+
+def _attn_flops_fwd(cfg: ModelConfig, T: int, S_ctx: float) -> float:
+    """qk + pv einsums, forward, all layers (0 for attention-free)."""
+    if cfg.family == "ssm" or not cfg.n_heads:
+        return 0.0
+    L = cfg.n_layers if cfg.family != "hybrid" else _hybrid_apps(cfg)
+    return 4.0 * L * T * S_ctx * cfg.n_heads * cfg.head_dim
+
+
+def _hybrid_apps(cfg: ModelConfig) -> int:
+    return -(-cfg.n_layers // cfg.attn_every) if cfg.attn_every else 0
+
+
+def _ssm_scan_flops_fwd(cfg: ModelConfig, T: int) -> float:
+    if cfg.family not in ("ssm", "hybrid"):
+        return 0.0
+    return 8.0 * cfg.n_layers * T * cfg.d_inner * cfg.ssm_state
+
+
+def _weight_flops_fwd(cfg: ModelConfig, T: int, T_enc: int = 0) -> float:
+    """2 * active-matmul-params * tokens (embedding gather excluded)."""
+    n_active = cfg.active_param_count() - cfg.vocab_size * cfg.d_model
+    if cfg.tie_embeddings:
+        # tied head still does the (D, V) matmul
+        n_active += cfg.vocab_size * cfg.d_model
+    f = 2.0 * n_active * T
+    if cfg.family == "hybrid" and cfg.attn_every:
+        # the shared block's params run A times but are counted once
+        hd = cfg.head_dim
+        shared = (cfg.d_model * cfg.n_heads * hd
+                  + 2 * cfg.d_model * cfg.n_kv_heads * hd
+                  + cfg.n_heads * hd * cfg.d_model
+                  + 3 * cfg.d_model * cfg.d_ff)
+        f += 2.0 * shared * T * max(0, _hybrid_apps(cfg) - 1)
+    if cfg.family == "encdec" and T_enc:
+        e = cfg.encoder
+        enc_params = e.n_layers * (4 * cfg.d_model ** 2
+                                   + 2 * cfg.d_model * cfg.d_ff)
+        f += 2.0 * enc_params * T_enc
+        # cross-attention k/v projection of encoder states, per dec layer
+        f += 2.0 * cfg.n_layers * T_enc * 2 * cfg.d_model \
+            * cfg.n_heads * cfg.head_dim
+        # cross-attention qk/pv
+        f += 4.0 * cfg.n_layers * T * e.n_frames * cfg.n_heads * cfg.head_dim
+    return f
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_device: float
+    hbm_bytes_device: float
+    coll_bytes_device: float
+    model_flops_device: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops_device / max(self.flops_device, 1.0)
+
+    @property
+    def step_time(self) -> float:
+        """No-overlap upper bound on the step time."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu(self) -> float:
+        return self.model_flops_device / max(self.step_time, 1e-12) \
+            / PEAK_FLOPS
+
+    def advice(self) -> str:
+        b = self.bottleneck
+        if b == "compute":
+            if self.useful_ratio < 0.6:
+                return ("compute-bound with low useful ratio: relax the "
+                        "remat policy (checkpoint fewer tensors) and trim "
+                        "attention/scan overhead")
+            return ("compute-bound near useful flops: increase per-chip "
+                    "batch or accept — this is the roofline")
+        if b == "memory":
+            return ("memory-bound: raise arithmetic intensity — larger "
+                    "per-device batch, fuse elementwise chains, keep "
+                    "params/cache in bf16, shard the KV cache wider")
+        return ("collective-bound: re-shard to cut the dominant collective "
+                "(vocab-parallel all-reduce -> intent-managed replica "
+                "cache; gradient all-reduce -> reduce-scatter; overlap "
+                "collectives with the layer scan)")
+
+
+def analytic_roofline(cfg: ModelConfig, shape: InputShape, n_devices: int,
+                      coll_bytes_device: float, mesh_name: str,
+                      train_flops_mult: float = 4.0) -> Roofline:
+    """``train_flops_mult``: fwd+bwd+remat-extra-fwd (4x fwd; 3x without
+    remat) — our train step remats every layer."""
+    B, S = shape.global_batch, shape.seq_len
+    N = cfg.active_param_count()
+    if shape.kind == "train":
+        T = B * S
+        S_ctx = (min(S, cfg.sliding_window) if cfg.sliding_window else S / 2)
+        T_enc = B * cfg.encoder.n_frames if cfg.encoder else 0
+        fwd = (_weight_flops_fwd(cfg, T, T_enc)
+               + _attn_flops_fwd(cfg, T, S_ctx)
+               + _ssm_scan_flops_fwd(cfg, T))
+        flops = train_flops_mult * fwd
+        model_flops = 6.0 * N * T
+        # HBM: params (fwd read + bwd read + opt update rw, bf16 + f32
+        # accum) + activations (remat: ~2 fwd writes + bwd reads) + logits
+        param_traffic = (N / n_devices) * (3 * BYTES_PARAM + 2 * 4 + 4)
+        act_traffic = (T / n_devices) * cfg.d_model * cfg.n_layers \
+            * BYTES_ACT * 12
+        logit_traffic = (T / n_devices) * cfg.vocab_size * BYTES_ACT * 3
+        hbm = param_traffic + act_traffic + logit_traffic
+    elif shape.kind == "prefill":
+        T = B * S
+        S_ctx = (min(S, cfg.sliding_window) if cfg.sliding_window else S / 2)
+        T_enc = B * cfg.encoder.n_frames if cfg.encoder else 0
+        fwd = (_weight_flops_fwd(cfg, T, T_enc)
+               + _attn_flops_fwd(cfg, T, S_ctx)
+               + _ssm_scan_flops_fwd(cfg, T))
+        flops = fwd
+        model_flops = 2.0 * N * T
+        param_traffic = (N / n_devices) * BYTES_PARAM
+        act_traffic = (T / n_devices) * cfg.d_model * cfg.n_layers \
+            * BYTES_ACT * 6
+        # KV cache writes
+        kv = 2 * (T / n_devices) * cfg.n_layers * max(cfg.n_kv_heads, 1) \
+            * max(cfg.head_dim, 1) * BYTES_ACT
+        hbm = param_traffic + act_traffic + kv
+    else:  # decode: one token, full cache context
+        T = B
+        S_ctx = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        T_enc = 0
+        fwd = (_weight_flops_fwd(cfg, T)
+               + _attn_flops_fwd(cfg, T, S_ctx)
+               + _ssm_scan_flops_fwd(cfg, T))
+        flops = fwd
+        model_flops = 2.0 * N * T
+        param_traffic = (N / n_devices) * BYTES_PARAM
+        if cfg.family == "ssm":
+            cache_traffic = (B * cfg.n_layers * cfg.d_inner
+                             * cfg.ssm_state * 4 * 2) / n_devices
+        elif cfg.family == "hybrid":
+            cache_traffic = (B * cfg.n_layers * cfg.d_inner
+                             * cfg.ssm_state * 4 * 2
+                             + 2 * B * _hybrid_apps(cfg) * S_ctx
+                             * cfg.n_kv_heads * cfg.head_dim * BYTES_ACT
+                             ) / n_devices
+        else:
+            cache_traffic = (2 * B * cfg.n_layers * S_ctx
+                             * max(cfg.n_kv_heads, 1)
+                             * max(cfg.head_dim, 1) * BYTES_ACT) / n_devices
+        hbm = param_traffic + cache_traffic
+    return Roofline(
+        arch=cfg.arch_id, shape=shape.name, mesh=mesh_name,
+        flops_device=flops / n_devices,
+        hbm_bytes_device=hbm,
+        coll_bytes_device=coll_bytes_device,
+        model_flops_device=model_flops / n_devices,
+    )
+
+
+def from_dryrun_json(paths) -> list:
+    rows = []
+    for path in paths:
+        with open(path) as f:
+            recs = json.load(f)
+        for rec in recs:
+            if rec.get("status") != "ok":
+                rows.append(rec)
+                continue
+            cfg = get_config(rec["arch"])
+            shape = SHAPES[rec["shape"]]
+            rl = analytic_roofline(cfg, shape, rec["n_devices"],
+                                   rec["collective_bytes"], rec["mesh"])
+            rec = dict(rec)
+            rec["roofline"] = {
+                "t_compute_s": rl.t_compute,
+                "t_memory_s": rl.t_memory,
+                "t_collective_s": rl.t_collective,
+                "bottleneck": rl.bottleneck,
+                "model_flops_device": rl.model_flops_device,
+                "hlo_flops_device": rl.flops_device,
+                "useful_ratio": rl.useful_ratio,
+                "mfu_bound": rl.mfu,
+                "advice": rl.advice(),
+            }
+            rows.append(rec)
+    return rows
+
+
+def markdown_table(rows) -> str:
+    out = ["| arch | shape | mesh | compute (ms) | memory (ms) | "
+           "collective (ms) | bottleneck | useful | MFU bound |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for rec in rows:
+        if rec.get("status") == "skipped":
+            out.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} |"
+                       f" — | — | — | skipped: {rec['reason'][:40]}… | | |")
+            continue
+        if rec.get("status") != "ok":
+            out.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} |"
+                       f" — | — | — | ERROR | | |")
+            continue
+        r = rec["roofline"]
+        out.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+            f"| {r['t_compute_s']*1e3:.2f} | {r['t_memory_s']*1e3:.2f} "
+            f"| {r['t_collective_s']*1e3:.2f} | {r['bottleneck']} "
+            f"| {r['useful_ratio']:.2f} | {r['mfu_bound']:.2f} |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("dryrun_json", nargs="+")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    rows = from_dryrun_json(args.dryrun_json)
+    print(markdown_table(rows))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Benchmark harness entry point: ``python -m benchmarks.run [--quick]``.
+
+One module per paper table/figure (DESIGN.md §8):
+  fig6_overall          — Figure 6  (overall vs baselines, 5 tasks)
+  fig7_scalability      — Figure 7  (2..16 nodes)
+  fig8_timing           — Figure 8  (adaptive action timing vs offsets)
+  table2_communication  — Table 2   (communication + staleness)
+  fig15_traces          — Figure 15 (per-key management traces)
+  kernels_bench         — kernel micro-benches + TPU roofline bounds
+
+Output: ``benchmark,variant,task,metric,value`` CSV rows on stdout and in
+``benchmarks/results/benchmarks.csv``.  The roofline deliverable is
+separate (``python -m benchmarks.roofline benchmarks/results/*.json``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workload scale (CI-sized)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args(argv)
+
+    from . import (fig6_overall, fig7_scalability, fig8_timing,
+                   fig15_traces, kernels_bench, quality_mf,
+                   table2_communication)
+
+    scale = 0.2 if args.quick else 0.5
+    benches = {
+        "fig6": lambda: fig6_overall.run(scale=scale),
+        "fig7": lambda: fig7_scalability.run(scale=min(scale, 0.35)),
+        # fig8 needs epochs >> offset for the immediate-action degradation
+        # to be visible (replica lifetimes scale with the offset)
+        "fig8": lambda: fig8_timing.run(scale=1.0),
+        "table2": lambda: table2_communication.run(scale=scale),
+        "fig15": lambda: fig15_traces.run(scale=min(scale, 0.4)),
+        "kernels": kernels_bench.run,
+        "quality_mf": quality_mf.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    all_rows = ["benchmark,variant,task,metric,value"]
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"### {name} ###", flush=True)
+        all_rows += fn()
+        print(f"### {name} done in {time.time() - t0:.1f}s ###", flush=True)
+
+    os.makedirs("benchmarks/results", exist_ok=True)
+    with open("benchmarks/results/benchmarks.csv", "w") as f:
+        f.write("\n".join(all_rows) + "\n")
+    print(f"wrote {len(all_rows) - 1} rows to "
+          "benchmarks/results/benchmarks.csv")
+
+
+if __name__ == "__main__":
+    main()

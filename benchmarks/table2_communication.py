@@ -1,0 +1,34 @@
+"""Table 2: per-epoch network communication and replica staleness, AdaPM vs
+AdaPM w/o relocation, on all five tasks.
+
+Claims validated: relocation reduces communicated data and staleness on
+every task, most strongly under locality (MF, GNN — the paper reports up
+to 9x less data)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from .common import TASKS, emit, run_one
+
+
+def run(scale: float = 0.5, n_nodes: int = 8, wpn: int = 4) -> List[str]:
+    rows: List[str] = []
+    for task in TASKS:
+        res = {}
+        for variant in ("adapm", "adapm_norel"):
+            m = run_one(variant, task, n_nodes=n_nodes, wpn=wpn, scale=scale)
+            res[variant] = m
+            emit(rows, "table2", variant, task, "gb_per_node",
+                 round(m.bytes_per_node / 1e9, 4))
+            emit(rows, "table2", variant, task, "staleness_ms",
+                 round(m.mean_staleness * 1e3, 3))
+        ratio = (res["adapm_norel"].bytes_per_node
+                 / max(res["adapm"].bytes_per_node, 1.0))
+        emit(rows, "table2", "ratio", task, "comm_reduction_x",
+             round(ratio, 2))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Quickstart: the paper's mechanism in 60 seconds.
+
+1. Simulate an 8-node cluster training a KGE-like sparse workload under
+   AdaPM and the standard baselines (paper Figure 1 / Figure 6 in
+   miniature).
+2. Run a few training steps of a real (reduced) LM with intent-managed
+   embeddings — the data loader signals intent, the planner replicates the
+   multi-shard-hot rows, training runs with the managed lookup.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core.api import CostModel
+from repro.core.baselines import StaticFullReplication, StaticPartitioning
+from repro.core.manager import AdaPM
+from repro.core.simulator import (SimConfig, simulate,
+                                  single_node_epoch_time)
+from repro.data.workloads import make_workload
+
+
+def part1_cluster_simulation():
+    print("=" * 64)
+    print("Part 1: AdaPM vs standard parameter management (simulated)")
+    print("=" * 64)
+    cost = CostModel()
+    wl = make_workload("KGE", n_nodes=8, wpn=4, scale=0.5)
+    t1 = single_node_epoch_time(wl, cost)
+    print(f"single-node epoch: {t1*1e3:.1f} ms (shared memory)")
+    for policy in (AdaPM(8, cost),
+                   StaticFullReplication(8, cost, wl.n_keys),
+                   StaticPartitioning(8, cost)):
+        m = simulate(policy, wl, SimConfig(signal_offset=100))
+        print(f"{policy.name:22s} speedup {t1/m.epoch_time:5.2f}x   "
+              f"remote {m.remote_fraction*100:5.2f}%   "
+              f"staleness {m.mean_staleness*1e3:6.2f} ms   "
+              f"{m.bytes_per_node/1e6:7.1f} MB/node")
+    print("-> AdaPM: near-zero remote accesses, low staleness, no tuning.\n")
+
+
+def part2_intent_managed_training():
+    print("=" * 64)
+    print("Part 2: intent-managed embeddings in a real training loop")
+    print("=" * 64)
+    from repro.configs.registry import get_config
+    from repro.train.loop import LoopConfig, train_loop
+
+    cfg = get_config("smollm-135m", smoke=True)
+    res = train_loop(cfg, LoopConfig(steps=20, batch=4, seq=32, pm=True,
+                                     cache_capacity=128, n_shards=4,
+                                     log_every=5))
+    print(f"-> loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} over "
+          f"{len(res.losses)} steps; {res.plans} placement plans; "
+          f"{res.recompiles} compiled miss-capacity buckets")
+
+
+if __name__ == "__main__":
+    part1_cluster_simulation()
+    part2_intent_managed_training()

@@ -1,0 +1,72 @@
+"""Batched decode serving across the architecture families.
+
+Prefills a batch of requests, then decodes autoregressively with the
+family-appropriate state: KV caches for dense/MoE/VLM, O(1) recurrent
+state for the SSM, hybrid state (mamba2 + shared-attention KV) for
+zamba2, and encoder output + decoder KV for whisper.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py [--arch falcon-mamba-7b]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.data.batches import make_batch
+from repro.models.model import forward, init_cache, init_model
+from repro.train.steps import make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="smollm-135m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B, P = args.batch, args.prompt_len
+    batch = make_batch(cfg, B, P, rng)
+    max_seq = P + args.new_tokens + 1
+    cache = init_cache(cfg, B, max_seq=max_seq)
+
+    # prefill: feed the prompt token-by-token through the decode path
+    # (simple and family-uniform; a fused prefill is the prefill_32k shape)
+    serve = jax.jit(make_serve_step(cfg))
+    if cfg.family == "encdec":
+        from repro.models.model import _encoder
+        cache["enc_out"] = _encoder(params, cfg, batch["frames"])
+    t0 = time.time()
+    for t in range(P):
+        logits, cache = serve(params, cache, batch["tokens"][:, t:t + 1])
+    t_prefill = time.time() - t0
+
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    out = [np.asarray(tok)[:, 0]]
+    t0 = time.time()
+    for _ in range(args.new_tokens):
+        logits, cache = serve(params, cache, tok)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(np.asarray(tok)[:, 0])
+    dt = time.time() - t0
+
+    gen = np.stack(out, axis=1)
+    print(f"{cfg.arch_id} ({cfg.family}): served {B} requests, "
+          f"prefill {P} toks in {t_prefill:.2f}s, "
+          f"decoded {args.new_tokens} toks in {dt:.2f}s "
+          f"({B*args.new_tokens/max(dt,1e-9):.1f} tok/s on CPU smoke config)")
+    print("generated token ids (req 0):", gen[0].tolist())
+    state_keys = {k: tuple(v.shape) for k, v in cache.items()
+                  if hasattr(v, "shape") and k != "len"}
+    print("decode state:", state_keys)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Sharding-aware numpy checkpointing.
+
+Each leaf is stored as one ``.npy`` under the checkpoint directory with a
+JSON manifest recording the tree structure, dtypes, and step metadata.
+Restore rebuilds the exact pytree (optionally re-placing leaves under a
+mesh via device_put with the caller's shardings).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [
+        "/".join(str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
+    return leaves, paths, treedef
+
+
+def save(ckpt_dir: str, tree: Any, step: int,
+         extra: Optional[Dict] = None) -> None:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves, paths, _ = _flatten(tree)
+    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    for i, (leaf, path) in enumerate(zip(leaves, paths)):
+        arr = np.asarray(leaf)
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(ckpt_dir, fname), arr)
+        manifest["leaves"].append(
+            {"path": path, "file": fname, "dtype": str(arr.dtype),
+             "shape": list(arr.shape)})
+    tmp = os.path.join(ckpt_dir, "manifest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(tmp, os.path.join(ckpt_dir, "manifest.json"))
+
+
+def load(ckpt_dir: str, like: Any, shardings: Any = None):
+    """Restore into the structure of ``like``.  Returns (tree, step)."""
+    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, paths, treedef = _flatten(like)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    out = []
+    for leaf, path in zip(leaves, paths):
+        ent = by_path.get(path)
+        if ent is None:
+            raise KeyError(f"checkpoint missing leaf {path!r}")
+        arr = np.load(os.path.join(ckpt_dir, ent["file"]))
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"shape mismatch for {path}: ckpt {arr.shape} vs "
+                f"model {np.shape(leaf)}")
+        out.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree, manifest["step"]
+
+
+def latest_step(base_dir: str) -> Optional[str]:
+    """Newest ``step_*`` checkpoint directory under ``base_dir``."""
+    if not os.path.isdir(base_dir):
+        return None
+    cands = sorted(d for d in os.listdir(base_dir) if d.startswith("step_"))
+    return os.path.join(base_dir, cands[-1]) if cands else None

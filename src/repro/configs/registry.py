@@ -1,0 +1,24 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from importlib import import_module
+
+_MODULES = {
+    "whisper-medium": "repro.configs.whisper_medium",
+    "granite-20b": "repro.configs.granite_20b",
+    "smollm-135m": "repro.configs.smollm_135m",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "llama3-405b": "repro.configs.llama3_405b",
+    "nemotron-4-15b": "repro.configs.nemotron_4_15b",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str, smoke: bool = False):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = import_module(_MODULES[arch_id])
+    return mod.SMOKE if smoke else mod.CONFIG

@@ -1,0 +1,247 @@
+"""Baseline parameter-management policies the paper compares against (§2, §5,
+Appendix A): static full replication, static parameter partitioning, selective
+replication (Petuum-style SSP / ESSP), and a NuPS-style static multi-technique
+manager (hot keys fully replicated, cold keys relocation-managed with
+application-triggered ``localize`` calls at a fixed relocation offset).
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List, Optional, Set, Tuple
+
+from .api import AccessResult, CostModel, PMPolicy
+from .intent import Intent
+from .ownership import OwnershipDirectory, home_node
+
+
+class StaticFullReplication(PMPolicy):
+    """Every node holds a replica of the full model (§A.1).
+
+    All accesses are local.  Replicas are synchronized every ``sync_every``
+    rounds with a dense AllReduce over the *entire* model (mirrored/DDP
+    semantics: the synchronization is oblivious to which values were
+    actually written — the over-communication the paper criticizes, §A.1;
+    ~2 bytes move per value per node in a ring).  Infeasible when the model
+    exceeds node memory.
+    """
+
+    name = "Full replication"
+
+    def __init__(self, n_nodes: int, cost: CostModel, n_keys: int,
+                 sync_every: int = 1):
+        super().__init__(n_nodes, cost)
+        self.n_keys = n_keys
+        self.sync_every = sync_every
+        self._last_sync_time = 0.0
+        self._round = 0
+        model_bytes = n_keys * cost.value_bytes
+        if model_bytes > cost.node_mem_bytes:
+            self.metrics.oom = True
+        self.metrics.peak_mem_bytes = model_bytes
+
+    def access(self, node, worker, key, now, write=True):
+        if self.metrics.oom:
+            return AccessResult(local=False)
+        self.metrics.n_accesses += 1
+        stale = max(0.0, now - self._last_sync_time)
+        self.metrics.staleness_sum += stale
+        self.metrics.n_replica_reads += 1
+        return AccessResult(local=True, staleness=stale)
+
+    def run_round(self, now, round_duration_hint):
+        self.metrics.rounds += 1
+        self._round += 1
+        if self._round % self.sync_every != 0:
+            return
+        nbytes = 2.0 * self.n_keys * self.cost.value_bytes
+        for node in range(self.n_nodes):
+            self.ledger.charge(node, nbytes, nmsgs=2 * (self.n_nodes - 1))
+        self._last_sync_time = now
+
+    def mem_bytes(self, node):
+        return self.n_keys * self.cost.value_bytes
+
+
+class StaticPartitioning(PMPolicy):
+    """Classic parameter server: keys hash-partitioned, every non-local
+    access is a synchronous network round trip (§A.2)."""
+
+    name = "Static partitioning"
+
+    def __init__(self, n_nodes: int, cost: CostModel):
+        super().__init__(n_nodes, cost)
+
+    def access(self, node, worker, key, now, write=True):
+        self.metrics.n_accesses += 1
+        if home_node(key, self.n_nodes) == node:
+            return AccessResult(local=True, staleness=0.0)
+        nbytes = 2 * self.cost.value_bytes
+        self.metrics.n_remote += 1
+        self.ledger.charge(node, nbytes, nmsgs=2)
+        return AccessResult(local=False)
+
+    def run_round(self, now, round_duration_hint):
+        self.metrics.rounds += 1
+
+
+class SelectiveReplicationSSP(PMPolicy):
+    """Petuum-style selective replication (§A.3).
+
+    Replicas are created *reactively*: the first access of a key at a node
+    blocks on a synchronous fetch.  A replica may serve reads while it is at
+    most ``staleness_bound`` clocks old (SSP); once it exceeds the bound the
+    next access blocks on a synchronous refresh.  Writes are pushed to the
+    key's home node once per round.  ``staleness_bound=None`` gives ESSP:
+    replicas are kept (and synchronized every round) forever, converging to
+    full replication traffic.
+    """
+
+    def __init__(self, n_nodes: int, cost: CostModel,
+                 staleness_bound: Optional[int] = None):
+        super().__init__(n_nodes, cost)
+        self.bound = staleness_bound
+        self.name = ("ESSP" if staleness_bound is None
+                     else f"SSP(bound={staleness_bound})")
+        # per node: key -> (clock at last refresh, sim time of last refresh)
+        self._repl: List[Dict[int, Tuple[int, float]]] = [
+            dict() for _ in range(n_nodes)]
+        self._dirty: List[Set[int]] = [set() for _ in range(n_nodes)]
+        self._clock: List[int] = [0] * n_nodes  # max worker clock per node
+
+    def advance_clock(self, node, worker, clock):
+        if clock > self._clock[node]:
+            self._clock[node] = clock
+
+    def access(self, node, worker, key, now, write=True):
+        self.metrics.n_accesses += 1
+        if home_node(key, self.n_nodes) == node:
+            return AccessResult(local=True, staleness=0.0)
+        ent = self._repl[node].get(key)
+        clk = self._clock[node]
+        fresh = ent is not None and (
+            self.bound is None or clk - ent[0] <= self.bound)
+        stalled = False
+        if not fresh:
+            # synchronous fetch/refresh (blocks the worker)
+            nbytes = self.cost.value_bytes + 64
+            self.metrics.n_remote += 1
+            self.ledger.charge(node, nbytes, nmsgs=2)
+            self._repl[node][key] = (clk, now)
+            ent = self._repl[node][key]
+            stalled = True
+        if write:
+            self._dirty[node].add(key)
+        stale = max(0.0, now - ent[1])
+        self.metrics.staleness_sum += stale
+        self.metrics.n_replica_reads += 1
+        return AccessResult(local=True, staleness=stale, stalled=stalled)
+
+    def run_round(self, now, round_duration_hint):
+        self.metrics.rounds += 1
+        for node in range(self.n_nodes):
+            n_dirty = len(self._dirty[node])
+            if n_dirty:
+                # push accumulated writes to the keys' home nodes
+                nbytes = n_dirty * self.cost.value_bytes
+                self.ledger.charge(node, nbytes, nmsgs=self.n_nodes - 1)
+                self._dirty[node].clear()
+            if self.bound is None:
+                # ESSP: every held replica is refreshed every round
+                # (downstream traffic, charged to this node as receiver-side
+                # share of the home nodes' fan-out)
+                held = self._repl[node]
+                nbytes = len(held) * self.cost.value_bytes
+                if nbytes:
+                    self.ledger.charge(node, nbytes, nmsgs=self.n_nodes - 1)
+                for k in held:
+                    held[k] = (self._clock[node], now)
+
+    def mem_bytes(self, node):
+        return len(self._repl[node]) * self.cost.value_bytes
+
+
+class NuPSStatic(PMPolicy):
+    """NuPS-style static multi-technique PM (§A.5).
+
+    The application declares, *before training*, a hot set (here: the true
+    ``hot_frac`` most frequent keys, i.e. the best-case oracle statistics)
+    that is fully replicated on all nodes and synchronized every round.  All
+    other keys are relocation-managed: the application calls ``localize``
+    (modeled through ``signal_intent``) ``reloc_offset`` clocks before the
+    access; the relocation is executed at the next round boundary.  Accesses
+    to cold keys that are not (yet, or anymore) on the node are synchronous
+    remote accesses — including *relocation conflicts*, where another node
+    localized the key away in the meantime (§5.7).
+    """
+
+    def __init__(self, n_nodes: int, cost: CostModel, n_keys: int,
+                 hot_keys: Set[int], reloc_offset: int = 64):
+        super().__init__(n_nodes, cost)
+        self.name = f"NuPS(hot={len(hot_keys)},off={reloc_offset})"
+        self.hot = hot_keys
+        self.reloc_offset = reloc_offset
+        self.dir = OwnershipDirectory(n_nodes)
+        self._dirty_hot: List[Set[int]] = [set() for _ in range(n_nodes)]
+        self._last_hot_sync = 0.0
+        # localize requests queued until the next round: (node, key, c_start)
+        self._pending_reloc: List[Tuple[int, int, int]] = []
+        self._clock: List[int] = [0] * n_nodes
+        self.metrics.peak_mem_bytes = (
+            len(hot_keys) + n_keys / n_nodes) * cost.value_bytes
+
+    def advance_clock(self, node, worker, clock):
+        if clock > self._clock[node]:
+            self._clock[node] = clock
+
+    def signal_intent(self, node: int, intent: Intent, now: float) -> None:
+        # The application issues localize() reloc_offset ahead; intents that
+        # arrive earlier are still queued at the fixed offset semantics —
+        # NuPS has no action timing, it acts on whatever was localized at
+        # the next round (the offset is the app's tuning knob).
+        for k in intent.keys:
+            if k not in self.hot:
+                self._pending_reloc.append((node, k, intent.c_start))
+
+    def access(self, node, worker, key, now, write=True):
+        self.metrics.n_accesses += 1
+        if key in self.hot:
+            if write:
+                self._dirty_hot[node].add(key)
+            stale = max(0.0, now - self._last_hot_sync)
+            self.metrics.staleness_sum += stale
+            self.metrics.n_replica_reads += 1
+            return AccessResult(local=True, staleness=stale)
+        if self.dir.owner_of(key) == node:
+            return AccessResult(local=True, staleness=0.0)
+        # relocation conflict or missed localize -> synchronous remote access
+        hops = self.dir.route(node, key)
+        nbytes = 2 * self.cost.value_bytes + hops * 64
+        self.metrics.n_remote += 1
+        self.ledger.charge(node, nbytes, nmsgs=1 + hops)
+        return AccessResult(local=False)
+
+    def run_round(self, now, round_duration_hint):
+        self.metrics.rounds += 1
+        c = self.cost
+        # hot-set AllReduce-ish sync every round
+        for node in range(self.n_nodes):
+            nbytes = 2.0 * len(self._dirty_hot[node]) * c.value_bytes
+            if nbytes:
+                self.ledger.charge(node, nbytes, nmsgs=2 * (self.n_nodes - 1))
+                self._dirty_hot[node].clear()
+        self._last_hot_sync = now
+        # execute queued relocations whose access is within the offset window
+        remaining: List[Tuple[int, int, int]] = []
+        for (node, k, c_start) in self._pending_reloc:
+            if c_start - self._clock[node] > self.reloc_offset:
+                remaining.append((node, k, c_start))
+                continue
+            src = self.dir.owner_of(k)
+            if src != node:
+                hops = self.dir.route(node, k)
+                nbytes = c.value_bytes + 64 * hops
+                self.ledger.charge(src, nbytes)  # grouped per round
+                self.dir.relocate(k, node)
+                self.metrics.n_relocations += 1
+        self._pending_reloc = remaining

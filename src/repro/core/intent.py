@@ -1,0 +1,156 @@
+"""Intent signaling primitives (paper §3).
+
+An *intent* is a declaration by one worker that it will access a set of
+parameter keys in a logical-clock window ``[c_start, c_end)``.  Each worker
+owns an independent logical clock that it advances with ``advance()`` (cheap,
+only raises the counter).  Intents are signaled *before* the access so the
+parameter manager can act proactively.
+
+States of an intent w.r.t. its worker's clock ``C`` (paper §3):
+  inactive: C <  c_start
+  active:   c_start <= C < c_end
+  expired:  c_end <= C
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Set, Tuple
+
+
+class IntentType(enum.Enum):
+    """Optional intent type. AdaPM treats all types identically (§4.1)."""
+
+    READ = "read"
+    WRITE = "write"
+    READ_WRITE = "read+write"
+
+
+@dataclass(frozen=True)
+class Intent:
+    """One signaled intent: worker ``worker_id`` will access ``keys`` in
+    the clock window ``[c_start, c_end)`` of *its own* logical clock."""
+
+    keys: Tuple[int, ...]
+    c_start: int
+    c_end: int
+    worker_id: int
+    type: IntentType = IntentType.READ_WRITE
+
+    def __post_init__(self):
+        if self.c_end <= self.c_start:
+            raise ValueError(
+                f"empty intent window [{self.c_start}, {self.c_end})")
+
+    def state(self, clock: int) -> str:
+        if clock < self.c_start:
+            return "inactive"
+        if clock < self.c_end:
+            return "active"
+        return "expired"
+
+
+class LogicalClock:
+    """Per-worker logical clock.  ``advance()`` is cheap by design (§3)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, value: int = 0):
+        self.value = value
+
+    def advance(self, by: int = 1) -> int:
+        if by < 0:
+            raise ValueError("clocks are monotone")
+        self.value += by
+        return self.value
+
+
+@dataclass
+class _KeyIntents:
+    """Per-key bag of (c_start, c_end, worker_id) windows on one node."""
+
+    windows: List[Tuple[int, int, int]] = field(default_factory=list)
+
+
+class IntentTable:
+    """Node-local store of signaled intents, indexed by key.
+
+    Tracks, per key, the union of intent windows of this node's workers.
+    Supports the queries the manager needs:
+      * is there *active* intent for key k (given current worker clocks)?
+      * is there *inactive* (future) intent, and what is its earliest start?
+      * garbage-collect expired windows.
+
+    Workers can signal overlapping/extending intents freely (§3); the table
+    simply stores all windows and reasons over the union.
+    """
+
+    def __init__(self):
+        self._by_key: Dict[int, _KeyIntents] = {}
+
+    def signal(self, intent: Intent) -> None:
+        for k in intent.keys:
+            self._by_key.setdefault(k, _KeyIntents()).windows.append(
+                (intent.c_start, intent.c_end, intent.worker_id))
+
+    def keys_with_any_intent(self) -> Iterable[int]:
+        return self._by_key.keys()
+
+    def has_active(self, key: int, clocks: Dict[int, int]) -> bool:
+        ki = self._by_key.get(key)
+        if ki is None:
+            return False
+        for (s, e, w) in ki.windows:
+            c = clocks.get(w, 0)
+            if s <= c < e:
+                return True
+        return False
+
+    def active_workers(self, key: int, clocks: Dict[int, int]) -> Set[int]:
+        ki = self._by_key.get(key)
+        if ki is None:
+            return set()
+        out = set()
+        for (s, e, w) in ki.windows:
+            c = clocks.get(w, 0)
+            if s <= c < e:
+                out.add(w)
+        return out
+
+    def earliest_future_start(self, key: int, clocks: Dict[int, int]):
+        """Earliest c_start among *inactive* windows for ``key`` together
+        with its worker, or ``None`` if no inactive intent exists."""
+        ki = self._by_key.get(key)
+        if ki is None:
+            return None
+        best = None
+        for (s, e, w) in ki.windows:
+            c = clocks.get(w, 0)
+            if c < s:  # inactive
+                if best is None or s < best[0]:
+                    best = (s, w)
+        return best
+
+    def last_end(self, key: int) -> int:
+        """Max c_end over all windows (used for expiry bookkeeping)."""
+        ki = self._by_key.get(key)
+        if ki is None:
+            return 0
+        return max(e for (_, e, _) in ki.windows)
+
+    def gc(self, clocks: Dict[int, int]) -> None:
+        """Drop expired windows; drop keys with no windows left."""
+        dead = []
+        for k, ki in self._by_key.items():
+            ki.windows = [
+                (s, e, w) for (s, e, w) in ki.windows
+                if clocks.get(w, 0) < e
+            ]
+            if not ki.windows:
+                dead.append(k)
+        for k in dead:
+            del self._by_key[k]
+
+    def __len__(self) -> int:
+        return len(self._by_key)

@@ -1,0 +1,82 @@
+"""Token data pipeline with intent signaling (paper §3, Figure 2).
+
+The loader prepares batches ``prefetch`` steps ahead of training.  The
+moment a batch is constructed its token-id set is known, so the loader
+signals intent to the `IntentPlanner` right then — exactly the paper's
+data-loader integration.  The training loop later asks the planner for
+placement plans; the loader itself never makes PM decisions (information
+and action stay decoupled).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.batches import make_batch
+from repro.pm.planner import IntentPlanner
+
+
+class SyntheticCorpus:
+    """Zipf-distributed token stream (natural-language-like marginals)."""
+
+    def __init__(self, vocab_size: int, zipf_a: float = 1.1, seed: int = 0):
+        self.V = vocab_size
+        ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+        p = ranks ** (-zipf_a)
+        self.p = p / p.sum()
+        self.perm = np.random.default_rng(seed).permutation(vocab_size)
+        self.rng = np.random.default_rng(seed + 1)
+
+    def tokens(self, shape) -> np.ndarray:
+        flat = self.rng.choice(self.V, size=int(np.prod(shape)), p=self.p)
+        return self.perm[flat].reshape(shape).astype(np.int32)
+
+
+class IntentSignalingLoader:
+    """Iterator of (step, batch) that runs ``prefetch`` steps ahead and
+    signals intent per data shard as each batch is constructed."""
+
+    def __init__(self, cfg: ModelConfig, batch: int, seq: int, *,
+                 n_shards: int = 1, prefetch: int = 16,
+                 planner: Optional[IntentPlanner] = None,
+                 corpus: Optional[SyntheticCorpus] = None, seed: int = 0):
+        self.cfg = cfg
+        self.B, self.S = batch, seq
+        self.n_shards = n_shards
+        self.prefetch = prefetch
+        self.planner = planner
+        self.corpus = corpus or SyntheticCorpus(cfg.vocab_size, seed=seed)
+        self.rng = np.random.default_rng(seed + 7)
+        self._queue: Deque[Tuple[int, Dict]] = deque()
+        self._next_prepare = 0
+
+    def _prepare(self, step: int) -> Dict:
+        batch = make_batch(self.cfg, self.B, self.S, self.rng)
+        toks = self.corpus.tokens((self.B, self.S))
+        labels = np.roll(toks, -1, axis=1)
+        batch = dict(batch)
+        import jax.numpy as jnp
+        batch["tokens"] = jnp.asarray(toks)
+        batch["labels"] = jnp.asarray(labels)
+        if self.planner is not None:
+            shard_size = max(1, self.B // self.n_shards)
+            for shard in range(self.n_shards):
+                ids = np.unique(
+                    toks[shard * shard_size:(shard + 1) * shard_size])
+                self.planner.signal(step, shard, ids)
+        return batch
+
+    def fill(self) -> None:
+        while len(self._queue) < self.prefetch:
+            self._queue.append(
+                (self._next_prepare, self._prepare(self._next_prepare)))
+            self._next_prepare += 1
+
+    def __iter__(self) -> Iterator[Tuple[int, Dict]]:
+        while True:
+            self.fill()
+            yield self._queue.popleft()

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: blocked sparse row gather from an embedding table.
+
+This is the read hot spot the paper's parameter manager serves (embedding /
+KGE / CTR rows).  TPU adaptation: instead of per-key RPCs, the gather is a
+scalar-prefetched blocked copy — the row ids live in SMEM (scalar prefetch),
+and the grid's index_map uses them to select which (1, block_d) tile of the
+HBM-resident table is staged into VMEM for each program instance.  The MXU
+is not involved; the kernel is bandwidth-bound by design, and block_d is
+sized so a tile is a multiple of the (8, 128) VREG lane layout.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(ids_ref, table_ref, out_ref):
+    # The index_map already routed the right table row-tile into VMEM.
+    out_ref[...] = table_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def embed_gather(table: jnp.ndarray, ids: jnp.ndarray, *,
+                 block_d: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """Gather ``table[ids]``: table (V, D), ids (n,) int32 -> (n, D).
+
+    Grid: (n, D // block_d); program (i, j) copies tile
+    ``table[ids[i], j*block_d : (j+1)*block_d]`` via VMEM.
+    """
+    n = ids.shape[0]
+    V, D = table.shape
+    block_d = min(block_d, D)
+    assert D % block_d == 0, (D, block_d)
+    grid = (n, D // block_d)
+
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_d),
+                             lambda i, j, ids_ref: (ids_ref[i], j)),
+            ],
+            out_specs=pl.BlockSpec((1, block_d), lambda i, j, ids_ref: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, D), table.dtype),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), table)

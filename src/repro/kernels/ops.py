@@ -1,0 +1,64 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the Pallas path compiles natively (``interpret=False``); everywhere
+else (this CPU container) the kernel body executes in interpret mode, and a
+pure-jnp fallback (`ref.py`) is available for speed-sensitive CPU callers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .adagrad_rows import adagrad_row_update as _adagrad_pallas
+from .embed_gather import embed_gather as _gather_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def embed_gather(table, ids, *, use_pallas: bool = True):
+    """table[ids] via the blocked Pallas gather (oracle fallback on CPU
+    when ``use_pallas=False``)."""
+    if not use_pallas:
+        return ref.embed_gather_ref(table, ids)
+    return _gather_pallas(table, ids, interpret=not _on_tpu())
+
+
+def adagrad_row_update(table, accum, ids, grads, *, lr=0.1, eps=1e-8,
+                       use_pallas: bool = True):
+    """Fused sparse AdaGrad row update; ids must be unique (see
+    ``segment_rows``)."""
+    if not use_pallas:
+        return ref.adagrad_row_update_ref(table, accum, ids, grads,
+                                          lr=lr, eps=eps)
+    return _adagrad_pallas(table, accum, ids, grads, lr=lr, eps=eps,
+                           interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots",))
+def segment_rows(ids, grads, n_slots: int):
+    """Aggregate duplicate row ids: returns (slot_ids (n_slots,), summed
+    grads (n_slots, D)).  Unused slots get id 0 with an all-zero gradient
+    (a zero AdaGrad update is NOT a no-op — accum would stay, value moves
+    by 0/sqrt(acc) = 0 — so zero rows are safe).
+
+    Static-shape friendly: n_slots >= number of distinct ids expected.
+    """
+    ids = ids.astype(jnp.int32)
+    sorted_idx = jnp.argsort(ids)
+    s_ids = ids[sorted_idx]
+    s_g = grads[sorted_idx]
+    is_new = jnp.concatenate(
+        [jnp.ones((1,), jnp.int32), (s_ids[1:] != s_ids[:-1]).astype(jnp.int32)])
+    slot = jnp.cumsum(is_new) - 1                     # segment index
+    slot = jnp.minimum(slot, n_slots - 1)
+    out_g = jnp.zeros((n_slots, grads.shape[1]), dtype=jnp.float32)
+    out_g = out_g.at[slot].add(s_g.astype(jnp.float32))
+    out_ids = jnp.zeros((n_slots,), dtype=jnp.int32)
+    out_ids = out_ids.at[slot].set(s_ids)
+    return out_ids, out_g

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every kernel in `repro.kernels` (allclose targets
+for the interpret-mode Pallas runs and the CPU fallback path)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embed_gather_ref(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, ids.astype(jnp.int32), axis=0)
+
+
+def adagrad_row_update_ref(table, accum, ids, grads, *, lr=0.1, eps=1e-8):
+    """Summed-gradient AdaGrad on unique rows ``ids``."""
+    ids = ids.astype(jnp.int32)
+    g = grads.astype(jnp.float32)
+    acc_rows = accum[ids].astype(jnp.float32) + g * g
+    p_rows = table[ids].astype(jnp.float32) \
+        - lr * g / (jnp.sqrt(acc_rows) + eps)
+    new_accum = accum.at[ids].set(acc_rows.astype(accum.dtype))
+    new_table = table.at[ids].set(p_rows.astype(table.dtype))
+    return new_table, new_accum
+
+
+def segment_rows_ref(ids, grads, n_unique: int):
+    """Aggregate duplicate row gradients: returns (unique_ids padded with
+    table-size sentinel handled by caller, summed grads) — reference for
+    `ops.segment_rows`."""
+    import numpy as np
+    ids_np = np.asarray(ids)
+    uniq, inv = np.unique(ids_np, return_inverse=True)
+    out = np.zeros((n_unique, grads.shape[1]), dtype=np.float32)
+    np.add.at(out, inv, np.asarray(grads, dtype=np.float32))
+    pad = n_unique - len(uniq)
+    uniq = np.concatenate([uniq, np.full((pad,), -1, dtype=ids_np.dtype)])
+    return uniq[:n_unique], out

@@ -1,0 +1,33 @@
+"""Production mesh construction (TPU v5e pods).
+
+Single pod:  (data=16, model=16)        = 256 chips
+Multi-pod:   (pod=2, data=16, model=16) = 512 chips
+
+Functions only — importing this module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh for CPU smoke runs."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the global batch is sharded over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh, name: str) -> int:
+    if name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]

@@ -1,0 +1,216 @@
+"""Sharding rules: logical parameter/activation axes -> mesh axes.
+
+Scheme (DESIGN.md §6):
+  * "model" axis: tensor parallelism — vocab, attention heads, FFN hidden,
+    MoE experts (expert-parallel when E divides), Mamba d_inner;
+  * "data" (x "pod") axis: batch; parameters/optimizer state additionally
+    ZeRO-shard their d_model-sized dimension over "data" (FSDP-style; XLA
+    inserts the per-layer all-gather inside the layer scan);
+  * any rule whose dimension does not divide the mesh axis falls back to
+    replication for that dimension (e.g. smollm's 9 heads on a 16-way
+    model axis -> FFN/vocab-only tensor parallelism).
+
+Everything here is pure shape reasoning — usable on ShapeDtypeStructs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.configs.base import ModelConfig
+from .mesh import axis_size, batch_axes
+
+
+def _fits(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0
+
+
+def _roles_for(name: str, shape, in_moe: bool, cfg: ModelConfig):
+    """Role per dimension of the (unstacked) leaf."""
+    nd = len(shape)
+    if name == "embed":
+        return ("vocab", "zero")
+    if name == "head":
+        return ("zero", "vocab")
+    if in_moe:
+        if name == "router":
+            return ("zero", None)
+        if name in ("w_gate", "w_up"):
+            return ("expert", "zero", "tp_sub")
+        if name == "w_down":
+            return ("expert", "tp_sub", "zero")
+    if name in ("wq",):
+        return ("zero", "tp")
+    if name in ("wk", "wv"):
+        return ("zero", "tp")
+    if name == "wo":
+        return ("tp", "zero")
+    if name in ("w_gate", "w_up", "w_in"):
+        return ("zero", "tp")
+    if name in ("w_down", "w_out"):
+        return ("tp", "zero")
+    if name == "in_proj":
+        return ("zero", "tp")
+    if name == "out_proj":
+        return ("tp", "zero")
+    if name == "conv_w":
+        return ("tp", None)
+    if name in ("conv_b", "dt_bias", "D_skip"):
+        return ("tp",)
+    if name == "x_proj":
+        return ("tp", None)
+    if name == "dt_proj":
+        # mamba1: (dt_rank, d_inner); mamba2: (d_model, n_heads)
+        return (None, "tp") if nd == 2 else ("tp",)
+    if name == "A_log":
+        return ("tp", None) if nd == 2 else ("tp",)
+    if name in ("B_proj", "C_proj"):
+        return ("zero", None)
+    return tuple(None for _ in range(nd))
+
+
+def needs_zero(cfg: ModelConfig, mesh, budget_bytes: float = 10e9) -> bool:
+    """Auto-ZeRO heuristic: shard layer weights over "data" (FSDP) only
+    when TP-only weights + AdaGrad state would not fit the per-device
+    budget (bf16 params + f32 accumulator = 6 bytes/param)."""
+    msize = axis_size(mesh, "model")
+    per_dev = cfg.param_count() / msize * 6.0
+    return per_dev > budget_bytes
+
+
+def param_pspecs(shapes: Any, cfg: ModelConfig, mesh, *,
+                 zero_embed_head: bool = True,
+                 zero_layers: Optional[bool] = None) -> Any:
+    """PartitionSpec tree matching ``shapes`` (arrays or SDStructs).
+
+    ``zero_embed_head``: also ZeRO-shard the d_model dimension of the
+    embedding table and LM head over "data".  This is the naive-FSDP
+    baseline; it shards the head *contraction* dimension, which forces XLA
+    to partial-sum all-reduce the full (B, S, V) logits across the data
+    axis — the dominant collective for every large-vocab config (see
+    EXPERIMENTS.md §Perf iteration 1).  ``False`` keeps embed/head sharded
+    over "model" (vocab) only: logits come out vocab-sharded with NO
+    collective.
+
+    ``zero_layers``: ZeRO-shard layer weights over "data".  ``None`` =
+    auto (`needs_zero`): enabled only when TP-only weights would not fit
+    per-device memory (llama3-405b, mixtral-8x22b, qwen3-moe).  When
+    enabled, pair it with the FSDP weight-gather constraints in the layer
+    scan (`layer_constraint_specs` + forward(fsdp_spec=…)), otherwise
+    GSPMD partial-sums full-batch activations over "data" instead of
+    gathering the (small) weights (EXPERIMENTS.md §Perf iteration 6)."""
+    dsize = axis_size(mesh, "data")
+    msize = axis_size(mesh, "model")
+    if zero_layers is None:
+        zero_layers = needs_zero(cfg, mesh)
+    expert_parallel = cfg.n_experts > 0 and _fits(cfg.n_experts, msize)
+
+    def resolve(role: Optional[str], dim: int,
+                expert_used: bool) -> Optional[str]:
+        if role == "vocab" or role == "tp":
+            return "model" if _fits(dim, msize) else None
+        if role == "expert":
+            return "model" if expert_parallel else None
+        if role == "tp_sub":
+            # shard expert-FFN hidden over model only when experts are NOT
+            # expert-parallel (a dim can't use "model" twice)
+            if expert_used:
+                return None
+            return "model" if _fits(dim, msize) else None
+        if role == "zero":
+            if not zero_layers:
+                return None
+            return "data" if _fits(dim, dsize) else None
+        return None
+
+    def leaf_spec(path, leaf):
+        names = [e.key for e in path if isinstance(e, DictKey)]
+        shape = tuple(leaf.shape)
+        name = names[-1] if names else ""
+        stacked = any(n in ("layers", "enc_layers") for n in names)
+        core = shape[1:] if stacked else shape
+        in_moe = "moe" in names
+        roles = _roles_for(name, core, in_moe, cfg)
+        if not zero_embed_head:
+            if name == "embed":
+                roles = ("vocab", None)
+            elif name == "head":
+                roles = (None, "vocab")
+        expert_used = expert_parallel and "expert" in roles
+        spec = [resolve(r, d, expert_used and r == "tp_sub")
+                for r, d in zip(roles, core)]
+        if stacked:
+            spec = [None] + spec
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, shapes)
+
+
+def batch_pspecs(cfg: ModelConfig, mesh, batch_shapes: Any) -> Any:
+    """Sharding for a training/prefill batch dict (dim 0 = global batch)."""
+    baxes = batch_axes(mesh)
+    bsize = 1
+    for a in baxes:
+        bsize *= axis_size(mesh, a)
+
+    def leaf_spec(path, leaf):
+        names = [e.key for e in path if isinstance(e, DictKey)]
+        name = names[-1] if names else ""
+        shape = tuple(leaf.shape)
+        if name.startswith("pm_cache"):
+            return P(*([None] * len(shape)))  # replica cache: replicated
+        first = baxes if _fits(shape[0], bsize) or shape[0] == bsize else None
+        rest = [None] * (len(shape) - 1)
+        return P(first, *rest)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch_shapes)
+
+
+def cache_pspecs(cfg: ModelConfig, mesh, cache: Any) -> Any:
+    """Sharding for decode caches."""
+    baxes = batch_axes(mesh)
+    bsize = 1
+    for a in baxes:
+        bsize *= axis_size(mesh, a)
+    dsize = axis_size(mesh, "data")
+    msize = axis_size(mesh, "model")
+
+    def leaf_spec(path, leaf):
+        names = [e.key for e in path if isinstance(e, DictKey)]
+        name = names[-1] if names else ""
+        shape = tuple(leaf.shape)
+        if name == "len":
+            return P()
+        if name in ("k", "v", "attn_k", "attn_v"):
+            L, B, S, KvH, hd = shape
+            b_ax = baxes if _fits(B, bsize) else None
+            kv_ax = "model" if _fits(KvH, msize) else None
+            hd_ax = None
+            s_ax = None
+            if kv_ax is None and _fits(hd, msize):
+                hd_ax = "model"
+            if b_ax is None and _fits(S, dsize):
+                s_ax = "data"
+            return P(None, b_ax, s_ax, kv_ax, hd_ax)
+        if name == "conv":
+            L, B, K1, di = shape
+            return P(None, baxes if _fits(B, bsize) else None, None,
+                     "model" if _fits(di, msize) else None)
+        if name == "h":
+            if len(shape) == 4:      # mamba1 (L, B, di, N)
+                L, B, di, N = shape
+                return P(None, baxes if _fits(B, bsize) else None,
+                         "model" if _fits(di, msize) else None, None)
+            L, B, nh, hd, N = shape  # mamba2
+            return P(None, baxes if _fits(B, bsize) else None,
+                     "model" if _fits(nh, msize) else None, None, None)
+        if name == "enc_out":
+            B, F, D = shape
+            return P(baxes if _fits(B, bsize) else None, None, None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)

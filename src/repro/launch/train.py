@@ -1,0 +1,50 @@
+"""Training driver: ``python -m repro.launch.train --arch smollm-135m ...``
+
+CPU runs use the reduced (``--smoke``) configs; full configs are exercised
+through the dry-run (`repro.launch.dryrun`).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.train.loop import LoopConfig, train_loop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS, default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="reduced config (CPU-runnable); default on")
+    ap.add_argument("--full", dest="smoke", action="store_false",
+                    help="full config (requires real accelerators)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--optimizer", choices=("adagrad", "adam"),
+                    default="adagrad")
+    ap.add_argument("--no-pm", dest="pm", action="store_false",
+                    help="disable intent-managed embeddings")
+    ap.add_argument("--cache-capacity", type=int, default=256)
+    ap.add_argument("--shards", type=int, default=4,
+                    help="logical data shards for intent aggregation")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    lc = LoopConfig(steps=args.steps, batch=args.batch, seq=args.seq,
+                    lr=args.lr, optimizer=args.optimizer, pm=args.pm,
+                    cache_capacity=args.cache_capacity,
+                    n_shards=args.shards, ckpt_dir=args.ckpt_dir,
+                    ckpt_every=args.ckpt_every)
+    res = train_loop(cfg, lc)
+    print(f"done: {len(res.losses)} steps, final loss "
+          f"{res.losses[-1]:.4f}, {res.plans} placement plans, "
+          f"{res.recompiles} compiled buckets, {res.wall_s:.1f}s wall")
+
+
+if __name__ == "__main__":
+    main()

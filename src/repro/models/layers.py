@@ -1,0 +1,281 @@
+"""Core transformer layers, written functionally: ``init_*`` builds a param
+dict, ``apply``-style functions consume it.  Everything is jit/pjit-friendly
+(pure jnp + lax); attention is computed in query/key blocks with an online
+softmax (flash-style) so long-context prefill never materializes an
+(S x S) score matrix.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Dict[str, jnp.ndarray]
+
+# --------------------------------------------------------------------- init
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+def init_norm(d: int, dtype, with_bias: bool) -> Params:
+    p = {"scale": jnp.ones((d,), dtype=dtype)}
+    if with_bias:
+        p["bias"] = jnp.zeros((d,), dtype=dtype)
+    return p
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(ks[0], (d_model, n_heads * head_dim), dtype),
+        "wk": _dense_init(ks[1], (d_model, n_kv_heads * head_dim), dtype),
+        "wv": _dense_init(ks[2], (d_model, n_kv_heads * head_dim), dtype),
+        "wo": _dense_init(ks[3], (n_heads * head_dim, d_model), dtype),
+    }
+
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    if activation == "swiglu":
+        return {
+            "w_gate": _dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_up": _dense_init(ks[1], (d_model, d_ff), dtype),
+            "w_down": _dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    return {
+        "w_in": _dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_out": _dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+
+# -------------------------------------------------------------------- norms
+
+def norm(x, p: Params, kind: str, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    else:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+# --------------------------------------------------------------------- rope
+
+def rope_angles(positions, head_dim: int, theta: float,
+                mrope_sections: Optional[Tuple[int, int, int]] = None):
+    """positions: (B, S) ints, or (B, S, 3) for M-RoPE (t/h/w coordinates).
+
+    Returns (cos, sin) of shape (B, S, head_dim//2), float32.
+    """
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if mrope_sections is None:
+        pos = positions.astype(jnp.float32)[..., None]          # (B,S,1)
+        ang = pos * inv_freq                                    # (B,S,half)
+    else:
+        # M-RoPE (Qwen2-VL): frequency bands are split into three sections
+        # driven by the temporal / height / width coordinate respectively.
+        assert sum(mrope_sections) == half, (mrope_sections, half)
+        sec_id = jnp.repeat(
+            jnp.arange(3), jnp.array(mrope_sections),
+            total_repeat_length=half)                            # (half,)
+        pos3 = positions.astype(jnp.float32)                     # (B,S,3)
+        pos = pos3[..., sec_id]                                  # (B,S,half)
+        ang = pos * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, head_dim); cos/sin: (B, S, head_dim//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+# ---------------------------------------------------------------- attention
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)) \
+        .reshape(b, s, h * n_rep, d)
+
+
+def _block_attn(q, k, v, mask, scale):
+    """One (q-block, kv-block) tile: returns un-normalized (o, m, l)."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1)                                   # (B,H,Q)
+    # guard fully-masked rows
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1)                                   # (B,H,Q)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o, m_safe, l
+
+
+def flash_attention(q, k, v, *, causal: bool, window: int = 0,
+                    q_offset: int = 0, q_block: int = 512,
+                    kv_block: int = 1024):
+    """Blocked attention with online softmax.
+
+    q: (B, Sq, H, d);  k, v: (B, Skv, KvH, d)  (GQA: H % KvH == 0).
+    ``q_offset``: absolute position of q[0] (for decode/prefill continuity).
+    ``window`` > 0 restricts attention to the last ``window`` positions
+    (sliding-window attention).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KvH = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, H // KvH)
+    v = _repeat_kv(v, H // KvH)
+    scale = 1.0 / math.sqrt(hd)
+
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    nq = -(-Sq // q_block)
+    nk = -(-Skv // kv_block)
+    pad_q = nq * q_block - Sq
+    pad_k = nk * kv_block - Skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    q_pos = q_offset + jnp.arange(nq * q_block)
+    k_pos = jnp.arange(nk * kv_block)
+    kv_valid = k_pos < Skv
+
+    qb = q.reshape(B, nq, q_block, H, hd).transpose(1, 0, 2, 3, 4)
+    kb = k.reshape(B, nk, kv_block, H, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, kv_block, H, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_step(qi):
+        q_i = qb[qi]
+        qp = lax.dynamic_slice_in_dim(q_pos, qi * q_block, q_block)
+
+        def kv_step(carry, inputs):
+            o, m, l = carry
+            k_j, v_j, kj = inputs
+            kp = lax.dynamic_slice_in_dim(k_pos, kj * kv_block, kv_block)
+            kvld = lax.dynamic_slice_in_dim(kv_valid, kj * kv_block, kv_block)
+            mask = jnp.ones((q_block, kv_block), dtype=bool)
+            if causal:
+                mask &= qp[:, None] >= kp[None, :]
+            if window:
+                mask &= (qp[:, None] - kp[None, :]) < window
+            mask &= kvld[None, :]
+            mask = mask[None, None]                            # (1,1,Q,K)
+            o_j, m_j, l_j = _block_attn(q_i, k_j, v_j, mask, scale)
+            m_new = jnp.maximum(m, m_j)
+            a = jnp.exp(m - m_new)
+            b = jnp.exp(m_j - m_new)
+            o = o * a.transpose(0, 2, 1)[..., None] \
+                + o_j * b.transpose(0, 2, 1)[..., None]
+            l = l * a + l_j * b
+            return (o, m_new, l), None
+
+        o0 = jnp.zeros((B, q_block, H, hd), dtype=jnp.float32)
+        # m floored at 0 (matches the m_safe convention in _block_attn);
+        # exact as long as exp(s) does not overflow for s <= max score.
+        m0 = jnp.zeros((B, H, q_block), dtype=jnp.float32)
+        l0 = jnp.zeros((B, H, q_block), dtype=jnp.float32)
+        (o, m, l), _ = lax.scan(
+            kv_step, (o0, m0, l0), (kb, vb, jnp.arange(nk)))
+        l = jnp.maximum(l, 1e-20)
+        o = o / l.transpose(0, 2, 1)[..., None]
+        return o
+
+    out = lax.map(q_step, jnp.arange(nq))                     # (nq,B,Qb,H,hd)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_block, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
+    """Single-token attention against a KV cache.
+
+    q: (B, 1, H, d); caches: (B, S, KvH, d); cache_len: valid prefix length
+    (the new token's k/v must already be written at ``cache_len - 1``).
+    """
+    B, _, H, hd = q.shape
+    S, KvH = k_cache.shape[1], k_cache.shape[2]
+    k = _repeat_kv(k_cache, H // KvH)
+    v = _repeat_kv(v_cache, H // KvH)
+    pos = jnp.arange(S)
+    valid = pos < cache_len
+    if window:
+        valid &= pos >= (cache_len - window)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def attention_block(x, p: Params, cfg, positions, *, cache=None,
+                    cache_len=None, cross_kv=None, causal=True):
+    """Full attention sub-layer: projections + rope + attention + output.
+
+    Returns (out, new_cache).  ``cache`` is a dict {k, v} of
+    (B, S_cache, KvH, hd) used for decode; ``cross_kv`` provides
+    encoder-side (k, v) for cross-attention (no rope, no cache).
+    """
+    B, S, D = x.shape
+    H, KvH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    if cross_kv is not None:
+        k, v = cross_kv
+        o = flash_attention(q, k, v, causal=False)
+        return (o.reshape(B, S, H * hd) @ p["wo"]), cache
+    k = (x @ p["wk"]).reshape(B, S, KvH, hd)
+    v = (x @ p["wv"]).reshape(B, S, KvH, hd)
+    sections = cfg.mrope_sections if cfg.mrope else None
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta, sections)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if cache is not None:
+        # decode: write k/v at position cache_len-1, attend to the prefix
+        idx = cache_len - 1
+        k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k, idx, axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v, idx, axis=1)
+        o = decode_attention(q, k_cache, v_cache, cache_len,
+                             window=cfg.sliding_window)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        o = flash_attention(q, k, v, causal=causal,
+                            window=cfg.sliding_window)
+        new_cache = None
+    return (o.reshape(B, S, H * hd) @ p["wo"]), new_cache
+
+# --------------------------------------------------------------------- mlp
+
+def mlp_block(x, p: Params, activation: str):
+    if activation == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    h = x @ p["w_in"]
+    if activation == "gelu":
+        h = jax.nn.gelu(h)
+    elif activation == "relu2":
+        h = jnp.square(jax.nn.relu(h))     # Nemotron-4 squared-ReLU
+    else:
+        raise ValueError(activation)
+    return h @ p["w_out"]

@@ -1,0 +1,91 @@
+"""Mixture-of-Experts block: top-k router + capacity-bounded dispatch.
+
+Dispatch uses the scatter/gather formulation: tokens are placed into a
+per-expert buffer of fixed capacity (position = running count of earlier
+assignments to the same expert); overflow tokens are dropped (weight-
+renormalized).  The expert FFN is batched over the expert dimension, which
+shards naturally: expert-parallel when n_experts divides the model axis,
+per-expert tensor-parallel otherwise.
+
+The router's top-k output *is* an intent signal in the paper's sense
+(§3): it announces which expert parameters each token will access one
+collective ahead of the expert computation.  `repro.pm` consumes it.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_moe(key, d_model: int, n_experts: int, moe_d_ff: int, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _dense_init(ks[0], (d_model, n_experts), dtype),
+        "w_gate": _dense_init(ks[1], (n_experts, d_model, moe_d_ff), dtype),
+        "w_up": _dense_init(ks[2], (n_experts, d_model, moe_d_ff), dtype),
+        "w_down": _dense_init(ks[3], (n_experts, moe_d_ff, d_model), dtype),
+    }
+
+
+def expert_capacity(n_tokens: int, n_experts: int, top_k: int,
+                    capacity_factor: float) -> int:
+    c = int(capacity_factor * n_tokens * top_k / n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_block(x, p: Params, *, n_experts: int, top_k: int,
+              capacity_factor: float = 1.25
+              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss, router_topk_idx).
+
+    ``router_topk_idx`` (B*S, k) is exposed as the expert-intent signal.
+    """
+    B, S, D = x.shape
+    T = B * S
+    E, K = n_experts, top_k
+    xt = x.reshape(T, D)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, topk_idx = jax.lax.top_k(probs, K)              # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch/Mixtral style)
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(topk_idx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    C = expert_capacity(T, E, K, capacity_factor)
+    e_flat = topk_idx.reshape(-1)                              # (T*K,)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)        # (T*K, E)
+    pos_in_e = jnp.sum((jnp.cumsum(onehot, axis=0) - 1) * onehot,
+                       axis=-1)                                # (T*K,)
+    keep = pos_in_e < C
+    # dropped assignments go to a trash slot E*C
+    slot = jnp.where(keep, e_flat * C + pos_in_e, E * C)       # (T*K,)
+
+    x_rep = jnp.repeat(xt, K, axis=0)                          # (T*K, D)
+    buf = jnp.zeros((E * C + 1, D), dtype=x.dtype)
+    buf = buf.at[slot].add(x_rep)
+    expert_in = buf[: E * C].reshape(E, C, D)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"])
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])    # (E, C, D)
+
+    out_flat = jnp.concatenate(
+        [expert_out.reshape(E * C, D),
+         jnp.zeros((1, D), dtype=expert_out.dtype)], axis=0)
+    gathered = out_flat[slot]                                  # (T*K, D)
+    weighted = gathered * gate_vals.reshape(-1)[:, None].astype(x.dtype)
+    out = jnp.sum(weighted.reshape(T, K, D), axis=1)
+    return out.reshape(B, S, D), aux.astype(x.dtype), topk_idx

@@ -1,0 +1,209 @@
+"""State-space blocks: Mamba-1 (selective scan, falcon-mamba) and a
+simplified Mamba-2 / SSD block (zamba2 trunk).
+
+Training/prefill uses a *chunked* parallel scan: the sequence is split into
+chunks; within a chunk the linear recurrence h_t = a_t * h_{t-1} + b_t is
+evaluated with `lax.associative_scan`, and a `lax.scan` carries the state
+across chunks.  This bounds the materialized (chunk, d_inner, state) tensor
+to VMEM-friendly sizes while keeping O(log chunk) depth.  Decode is a
+single recurrence step with a (conv ring, h) state — O(1) per token, which
+is what makes ``long_500k`` runnable for the SSM/hybrid architectures.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import _dense_init
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _scan_op(left, right):
+    a_l, b_l = left
+    a_r, b_r = right
+    return a_l * a_r, b_l * a_r + b_r
+
+
+def _chunked_linear_scan(a, b, h0, chunk: int):
+    """h_t = a_t * h_{t-1} + b_t along axis 1 (time).
+
+    a, b: (B, S, ...) with identical trailing dims; h0: (B, ...).
+    Returns (h (B, S, ...), h_final (B, ...)).
+    """
+    B, S = a.shape[0], a.shape[1]
+    chunk = min(chunk, S)
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        # identity elements: a=1, b=0
+        a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
+                    constant_values=1.0)
+        b = jnp.pad(b, [(0, 0), (0, pad)] + [(0, 0)] * (b.ndim - 2))
+    ac = a.reshape((B, n, chunk) + a.shape[2:]).transpose(
+        (1, 0, 2) + tuple(range(3, a.ndim + 1)))
+    bc = b.reshape((B, n, chunk) + b.shape[2:]).transpose(
+        (1, 0, 2) + tuple(range(3, b.ndim + 1)))
+
+    def step(h_carry, inputs):
+        a_i, b_i = inputs                       # (B, chunk, ...)
+        a_cum, b_cum = lax.associative_scan(_scan_op, (a_i, b_i), axis=1)
+        h = b_cum + a_cum * h_carry[:, None]
+        return h[:, -1], h
+
+    h_final, hs = lax.scan(step, h0, (ac, bc))  # hs: (n, B, chunk, ...)
+    hs = hs.transpose((1, 0, 2) + tuple(range(3, hs.ndim))).reshape(
+        (B, n * chunk) + hs.shape[3:])
+    return hs[:, :S], h_final
+
+
+def _causal_conv(x, w, b, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over time.  x: (B, S, C); w: (C, K); b: (C,).
+
+    With ``state`` (B, K-1, C): single-step decode (S == 1); returns
+    (y, new_state).  Without: training path over the full sequence.
+    """
+    K = w.shape[1]
+    if state is not None:
+        window = jnp.concatenate([state, x], axis=1)          # (B, K, C)
+        y = jnp.einsum("bkc,ck->bc", window, w)[:, None] + b
+        return y, window[:, 1:]
+    B, S, C = x.shape
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + S] * w[:, i] for i in range(K)) + b
+    return y, None
+
+
+# ------------------------------------------------------------------ mamba 1
+
+def init_mamba1(key, d_model: int, d_inner: int, ssm_state: int,
+                conv: int, dt_rank: int, dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": _dense_init(ks[0], (d_model, 2 * d_inner), dtype),
+        "conv_w": _dense_init(ks[1], (d_inner, conv), dtype, scale=0.5),
+        "conv_b": jnp.zeros((d_inner,), dtype=dtype),
+        "x_proj": _dense_init(ks[2], (d_inner, dt_rank + 2 * ssm_state),
+                              dtype),
+        "dt_proj": _dense_init(ks[3], (dt_rank, d_inner), dtype),
+        "dt_bias": jnp.full((d_inner,), -4.6, dtype=dtype),  # softplus~0.01
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ssm_state + 1, dtype=jnp.float32),
+            (d_inner, ssm_state))).astype(dtype),
+        "D_skip": jnp.ones((d_inner,), dtype=dtype),
+        "out_proj": _dense_init(ks[4], (d_inner, d_model), dtype),
+    }
+
+
+def mamba1_block(x, p: Params, *, ssm_state: int, dt_rank: int,
+                 state: Optional[Tuple] = None, scan_chunk: int = 256):
+    """x: (B, S, D).  ``state`` = (conv_state (B,K-1,di), h (B,di,N)) for
+    single-step decode.  Returns (out, new_state)."""
+    B, S, D = x.shape
+    N = ssm_state
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)                       # (B,S,di)
+    di = x_in.shape[-1]
+
+    conv_state = state[0] if state is not None else None
+    x_c, new_conv = _causal_conv(x_in, p["conv_w"], p["conv_b"], conv_state)
+    x_c = jax.nn.silu(x_c)
+
+    dbc = x_c @ p["x_proj"]
+    dt, Bmat, Cmat = jnp.split(dbc, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])    # (B,S,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (di,N)
+
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf[..., None] * A)                           # (B,S,di,N)
+    b = (dtf * x_c.astype(jnp.float32))[..., None] \
+        * Bmat.astype(jnp.float32)[:, :, None, :]             # (B,S,di,N)
+
+    if state is None:
+        h0 = jnp.zeros((B, di, N), dtype=jnp.float32)
+        h, h_last = _chunked_linear_scan(a, b, h0, scan_chunk)
+        new_h = h_last
+    else:
+        h_prev = state[1]
+        h = a[:, 0] * h_prev + b[:, 0]                        # (B,di,N)
+        new_h = h
+        h = h[:, None]                                        # (B,1,di,N)
+
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cmat.astype(jnp.float32))
+    y = y + p["D_skip"].astype(jnp.float32) * x_c.astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    out = y @ p["out_proj"]
+    new_state = (new_conv, new_h) if state is not None else None
+    return out, new_state
+
+
+# ------------------------------------------------------------------ mamba 2
+
+def init_mamba2(key, d_model: int, d_inner: int, ssm_state: int,
+                conv: int, head_dim: int, dtype) -> Params:
+    nh = d_inner // head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": _dense_init(ks[0], (d_model, 2 * d_inner), dtype),
+        "conv_w": _dense_init(ks[1], (d_inner, conv), dtype, scale=0.5),
+        "conv_b": jnp.zeros((d_inner,), dtype=dtype),
+        "dt_proj": _dense_init(ks[2], (d_model, nh), dtype),
+        "dt_bias": jnp.full((nh,), -4.6, dtype=dtype),
+        "B_proj": _dense_init(ks[3], (d_model, ssm_state), dtype),
+        "C_proj": _dense_init(ks[4], (d_model, ssm_state), dtype),
+        "A_log": jnp.zeros((nh,), dtype=dtype),
+        "D_skip": jnp.ones((nh,), dtype=dtype),
+        "out_proj": _dense_init(ks[5], (d_inner, d_model), dtype),
+    }
+
+
+def mamba2_block(x, p: Params, *, ssm_state: int, head_dim: int,
+                 state: Optional[Tuple] = None, scan_chunk: int = 64):
+    """Simplified SSD: scalar decay per head.  x: (B, S, D).
+
+    ``state`` = (conv_state (B,K-1,di), h (B,nh,hd,N)) for decode."""
+    B, S, D = x.shape
+    N = ssm_state
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    di = x_in.shape[-1]
+    hd = head_dim
+    nh = di // hd
+
+    conv_state = state[0] if state is not None else None
+    x_c, new_conv = _causal_conv(x_in, p["conv_w"], p["conv_b"], conv_state)
+    x_c = jax.nn.silu(x_c)
+
+    dt = jax.nn.softplus(x @ p["dt_proj"] + p["dt_bias"])     # (B,S,nh)
+    Bmat = x @ p["B_proj"]                                    # (B,S,N)
+    Cmat = x @ p["C_proj"]                                    # (B,S,N)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (nh,)
+
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf * A)                                      # (B,S,nh)
+    xh = x_c.reshape(B, S, nh, hd).astype(jnp.float32)
+    # b_t = dt * x_t (outer) B_t : (B,S,nh,hd,N)
+    b = (dtf[..., None, None] * xh[..., None]
+         * Bmat.astype(jnp.float32)[:, :, None, None, :])
+    a_full = jnp.broadcast_to(a[..., None, None], b.shape)
+
+    if state is None:
+        h0 = jnp.zeros((B, nh, hd, N), dtype=jnp.float32)
+        h, h_last = _chunked_linear_scan(a_full, b, h0, scan_chunk)
+        new_h = h_last
+    else:
+        h_prev = state[1]
+        h = a_full[:, 0] * h_prev + b[:, 0]
+        new_h = h
+        h = h[:, None]
+
+    y = jnp.einsum("bshdn,bsn->bshd", h, Cmat.astype(jnp.float32))
+    y = y + p["D_skip"].astype(jnp.float32)[:, None] * xh[:, :S]
+    y = y.reshape(B, S, di).astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_state = (new_conv, new_h) if state is not None else None
+    return out, new_state

@@ -1,0 +1,76 @@
+"""Functional optimizers.  AdaGrad is the paper's optimizer for all five
+tasks (§C); Adam is provided for the LM examples.  Both are pytree-generic;
+state shards exactly like the parameters (the dry-run relies on this).
+
+The *sparse* AdaGrad row path (embedding tables) goes through the fused
+Pallas kernel (`repro.kernels.ops.adagrad_row_update`) in the e2e example;
+these dense versions are the pjit'd default used by `train_step`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdaGradState(NamedTuple):
+    accum: Any
+
+
+def adagrad_init(params) -> AdaGradState:
+    return AdaGradState(
+        accum=jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params))
+
+
+def adagrad_update(grads, state: AdaGradState, params, *,
+                   lr: float = 0.1, eps: float = 1e-8
+                   ) -> Tuple[Any, AdaGradState]:
+    def upd(p, g, a):
+        g32 = g.astype(jnp.float32)
+        a_new = a + g32 * g32
+        p_new = p.astype(jnp.float32) - lr * g32 / (jnp.sqrt(a_new) + eps)
+        return p_new.astype(p.dtype), a_new
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.accum)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_accum = jax.tree_util.tree_map(lambda t: t[1], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdaGradState(new_accum)
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+def adam_init(params) -> AdamState:
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamState(mu=jax.tree_util.tree_map(z, params),
+                     nu=jax.tree_util.tree_map(z, params),
+                     count=jnp.zeros((), jnp.int32))
+
+
+def adam_update(grads, state: AdamState, params, *, lr: float = 3e-4,
+                b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8
+                ) -> Tuple[Any, AdamState]:
+    c = state.count + 1
+    cf = c.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        m_hat = m_new / (1 - b1 ** cf)
+        v_hat = v_new / (1 - b2 ** cf)
+        p_new = p.astype(jnp.float32) - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+        return p_new.astype(p.dtype), m_new, v_new
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu)
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), AdamState(mu=pick(1), nu=pick(2), count=c)

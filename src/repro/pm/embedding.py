@@ -1,0 +1,144 @@
+"""Intent-managed embedding: the TPU-native mapping of AdaPM (DESIGN.md §3b).
+
+The embedding table is vocab-sharded over the ``model`` mesh axis (the
+"allocation": every row has one owner shard).  A per-device *replica cache*
+holds the rows the planner decided to replicate (rows with concurrent
+multi-shard intent — AdaPM's selective replication).  Lookups take two
+paths:
+
+  hit  : the row is in the replica cache -> pure local read, no collective;
+  miss : the row is only on its owner shard -> the miss tokens are
+         compacted into a fixed-capacity buffer (capacity M is *known in
+         advance from intent*, bucketed to keep shapes static) and served
+         by one masked-partial-sum all-reduce over (M, D) instead of the
+         dense (B*S, D) all-reduce of plain vocab-parallel embedding.
+
+Replica synchronization: gradients NEVER flow into the cache (replicas are
+not independent parameters).  A custom VJP routes all row gradients to the
+owner-sharded table; the cache is re-gathered from the table once per
+refresh round (`refresh_cache`), which in the synchronous SPMD mapping
+bounds replica staleness to one round — refresh-after-update gives exact
+equivalence with an unmanaged embedding (tested).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EmbedPMState(NamedTuple):
+    """Device-side state of the intent-managed embedding."""
+
+    table: jnp.ndarray       # (V, D), vocab-sharded over "model"
+    cache_ids: jnp.ndarray   # (C,) int32, SORTED; padded with V (no match)
+    cache_rows: jnp.ndarray  # (C, D), replicated
+
+
+def make_state(table: jnp.ndarray, cache_ids: jnp.ndarray) -> EmbedPMState:
+    """Build state with a freshly synchronized cache.  ``cache_ids`` must be
+    sorted ascending; pad slots use V (matches no token)."""
+    cache_rows = jnp.take(table, jnp.clip(cache_ids, 0, table.shape[0] - 1),
+                          axis=0)
+    pad = (cache_ids >= table.shape[0])[:, None]
+    cache_rows = jnp.where(pad, 0.0, cache_rows)
+    return EmbedPMState(table, cache_ids.astype(jnp.int32), cache_rows)
+
+
+def refresh_cache(state: EmbedPMState,
+                  cache_ids: jnp.ndarray | None = None) -> EmbedPMState:
+    """Replica sync round: re-gather the hot rows from their owners (one
+    grouped all-gather on TPU).  Optionally installs a new plan's ids."""
+    ids = state.cache_ids if cache_ids is None else cache_ids
+    return make_state(state.table, ids)
+
+
+def _cache_probe(cache_ids, tokens_flat):
+    """(slot, hit) per token via binary search over the sorted cache ids."""
+    slot = jnp.searchsorted(cache_ids, tokens_flat)
+    slot = jnp.clip(slot, 0, cache_ids.shape[0] - 1)
+    hit = cache_ids[slot] == tokens_flat
+    return slot, hit
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def pm_lookup(table, cache_ids, cache_rows, tokens, miss_capacity: int,
+              strict: bool = False):
+    """Intent-managed embedding lookup.
+
+    table (V, D); cache_ids (C,) sorted; cache_rows (C, D); tokens (B, S).
+    ``miss_capacity``: static bound on cache-miss tokens per call — the
+    planner derives it exactly from intent and picks a bucket; overflow
+    misses are transparently correct (they fall back to a second pass
+    guarded by a predicate) but cost an extra dense lookup, so the planner
+    sizing them away is the perf story, not a correctness requirement.
+    """
+    out, _ = _pm_lookup_fwd(table, cache_ids, cache_rows, tokens,
+                            miss_capacity, strict)
+    return out
+
+
+def _lookup_impl(table, cache_ids, cache_rows, tokens, miss_capacity,
+                 strict=False):
+    B, S = tokens.shape
+    T = B * S
+    M = min(miss_capacity, T)
+    tok = tokens.reshape(T).astype(jnp.int32)
+    slot, hit = _cache_probe(cache_ids, tok)
+    hit_rows = jnp.take(cache_rows, slot, axis=0)
+
+    # compact the misses into M slots (intent-planned capacity)
+    miss = ~hit
+    pos = jnp.cumsum(miss.astype(jnp.int32)) - 1          # position per miss
+    in_buf = miss & (pos < M)
+    buf_slot = jnp.where(in_buf, pos, M)                  # overflow -> trash
+    buf_ids = jnp.zeros((M + 1,), jnp.int32).at[buf_slot].set(tok)[:M]
+    # one compact lookup (on TPU: masked partial + all-reduce over (M, D))
+    buf_rows = jnp.take(table, buf_ids, axis=0)           # (M, D)
+    miss_rows = jnp.concatenate(
+        [buf_rows, jnp.zeros((1,) + buf_rows.shape[1:], buf_rows.dtype)])[
+        buf_slot]
+    # rare overflow: correctness fallback via a direct (dense) gather
+    n_miss = jnp.sum(miss.astype(jnp.int32))
+    overflow = miss & (pos >= M)
+
+    def with_overflow(mr):
+        dense = jnp.take(table, tok, axis=0)
+        return jnp.where(overflow[:, None], dense, mr)
+
+    if not strict:
+        # rare overflow: correctness fallback via a direct (dense) gather.
+        # ``strict=True`` (dry-run / planner-guaranteed capacity) omits the
+        # branch entirely so no conditional dense collective is lowered.
+        miss_rows = jax.lax.cond(n_miss > M, with_overflow,
+                                 lambda mr: mr, miss_rows)
+    out = jnp.where(hit[:, None], hit_rows, miss_rows)
+    return out.reshape(B, S, table.shape[1])
+
+
+def _pm_lookup_fwd(table, cache_ids, cache_rows, tokens, miss_capacity,
+                   strict=False):
+    out = _lookup_impl(table, cache_ids, cache_rows, tokens, miss_capacity,
+                       strict)
+    return out, (tokens, table.shape)
+
+
+def _pm_lookup_bwd(miss_capacity, strict, res, g):
+    tokens, (V, D) = res
+    B, S = tokens.shape
+    tok = tokens.reshape(B * S).astype(jnp.int32)
+    gt = g.reshape(B * S, D)
+    # replica write-back: ALL row gradients go to the owner-sharded table
+    grad_table = jnp.zeros((V, D), dtype=gt.dtype).at[tok].add(gt)
+    return (grad_table, None, None, None)
+
+
+pm_lookup.defvjp(_pm_lookup_fwd, _pm_lookup_bwd)
+
+
+def plain_lookup(table, tokens):
+    """Unmanaged vocab-parallel lookup (static-partitioning baseline)."""
+    return jnp.take(table, tokens.astype(jnp.int32), axis=0)

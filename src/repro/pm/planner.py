@@ -1,0 +1,141 @@
+"""Host-side placement planner: turns intent signals from the data loader
+into placement plans for the intent-managed embedding (DESIGN.md §3b).
+
+This is where the faithful AdaPM logic (repro.core) plugs into the SPMD
+runtime.  The planner treats each *data shard* as a node:
+
+  * rows with active intent on >= 2 shards in the planning window are
+    *replicated* -> placed in the device replica cache (AdaPM §4.1:
+    concurrent intent -> selective replication);
+  * rows with single-shard intent stay owner-sharded (the relocation arm
+    degenerates under SPMD: ownership is affine in the row id, so
+    "relocate" means "serve via the compact miss path", which moves the
+    value exactly once to exactly the shard that needs it — the same bytes
+    a relocation would move);
+  * Algorithm 1 (ActionTimer) decides how many steps of lookahead the plan
+    must cover, i.e. when to act on the loader's intent signals.
+
+Because intent is exact, the planner also knows the exact per-step
+cache-miss count and sizes the compact miss buffer (bucketed powers of two)
+— static shapes for XLA out of dynamic workload knowledge.
+"""
+
+from __future__ import annotations
+
+from collections import Counter, deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.timing import ActionTimer
+
+
+@dataclass(frozen=True)
+class PlacementPlan:
+    version: int
+    cache_ids: np.ndarray        # (C,) sorted int32, padded with V
+    miss_capacity: int           # bucketed exact bound from intent
+    window: tuple                # (start_step, end_step) the plan covers
+
+
+def _bucket(n: int, floor: int = 64) -> int:
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+class IntentPlanner:
+    """Consumes per-step, per-shard intent (the upcoming batches' row ids)
+    and emits `PlacementPlan`s."""
+
+    def __init__(self, vocab_size: int, cache_capacity: int,
+                 n_shards: int, plan_every: int = 8,
+                 alpha: float = 0.1, p: float = 0.9999, lam0: float = 10.0):
+        self.V = vocab_size
+        self.C = cache_capacity
+        self.n_shards = n_shards
+        self.plan_every = plan_every
+        self.timer = ActionTimer(alpha=alpha, p=p, lam0=lam0)
+        # step -> list over shards of id arrays (intent signals)
+        self._intents: Dict[int, List[np.ndarray]] = {}
+        self._version = 0
+        self._last_planned_step = -1
+
+    # ------------------------------------------------------------ signals
+    def signal(self, step: int, shard: int, ids: np.ndarray) -> None:
+        """Loader signals: ``shard`` will access ``ids`` at ``step``
+        (Intent(P, step, step+1) in the paper's API)."""
+        per_shard = self._intents.setdefault(
+            step, [None] * self.n_shards)  # type: ignore[list-item]
+        per_shard[shard] = np.asarray(ids, dtype=np.int64)
+
+    def observe_round(self, step: int) -> None:
+        """One planning round passed; the training step counter is the
+        worker clock (Algorithm 1 rate estimation)."""
+        self.timer.observe_round(0, step)
+
+    # ------------------------------------------------------------- plans
+    def lookahead(self) -> int:
+        """How far ahead a plan must cover (Alg. 1 soft upper bound)."""
+        return max(self.plan_every, self.timer.horizon(0))
+
+    def plan(self, current_step: int) -> PlacementPlan:
+        """Build the plan for [current_step, current_step + lookahead)."""
+        window = range(current_step, current_step + self.lookahead())
+        multi: Counter = Counter()
+        single: Counter = Counter()
+        known_steps = []
+        for s in window:
+            shards = self._intents.get(s)
+            if shards is None:
+                continue
+            known_steps.append(s)
+            per_key_shards: Dict[int, int] = {}
+            for sh, ids in enumerate(shards):
+                if ids is None:
+                    continue
+                for k in np.unique(ids):
+                    per_key_shards[k] = per_key_shards.get(k, 0) + 1
+            for k, cnt in per_key_shards.items():
+                if cnt >= 2:
+                    multi[k] += cnt      # concurrent intent -> replicate
+                else:
+                    single[k] += 1
+        hot = [int(k) for k, _ in multi.most_common(self.C)]
+        cache_ids = np.full((self.C,), self.V, dtype=np.int32)
+        if hot:
+            cache_ids[: len(hot)] = np.asarray(hot, dtype=np.int32)
+        cache_ids = np.sort(cache_ids)
+
+        # exact per-step miss counts over the window -> capacity bucket
+        hot_set = set(int(h) for h in hot)
+        worst_miss = 1
+        for s in known_steps:
+            for ids in self._intents.get(s, []):
+                if ids is None:
+                    continue
+                miss = sum(1 for k in ids if int(k) not in hot_set)
+                worst_miss = max(worst_miss, miss)
+        self._version += 1
+        return PlacementPlan(
+            version=self._version,
+            cache_ids=cache_ids,
+            miss_capacity=_bucket(worst_miss),
+            window=(current_step, current_step + self.lookahead()),
+        )
+
+    def should_replan(self, current_step: int,
+                      active: Optional[PlacementPlan]) -> bool:
+        """Act-on-intent decision: replan when the Alg.-1 horizon says the
+        worker may run past the active plan's window before the *next*
+        planning round completes."""
+        if active is None:
+            return True
+        horizon = self.timer.horizon(0)
+        return active.window[1] < current_step + horizon
+
+    def gc(self, before_step: int) -> None:
+        for s in [s for s in self._intents if s < before_step]:
+            del self._intents[s]

@@ -1,0 +1,116 @@
+"""Training loop with first-class intent-managed parameter management.
+
+Per step:
+  1. the loader (already ``prefetch`` steps ahead) has signaled intent for
+     upcoming batches;
+  2. the planner (Algorithm 1 timing) decides whether to act: emit a new
+     placement plan (replica-cache contents + miss-buffer capacity);
+  3. the replica cache is synchronized from the owner-sharded table (one
+     grouped gather per round — AdaPM's batched replica sync);
+  4. the train step runs with the managed embedding path.
+
+Miss-capacity buckets map to distinct compiled executables; the bucket
+ladder is small (powers of two) so recompiles amortize away.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import IntentSignalingLoader
+from repro.models.model import init_model
+from repro.pm.embedding import make_state
+from repro.pm.planner import IntentPlanner, PlacementPlan
+from repro.train.steps import make_opt_init, make_train_step
+
+
+@dataclass
+class LoopConfig:
+    steps: int = 50
+    batch: int = 8
+    seq: int = 64
+    lr: float = 0.01
+    optimizer: str = "adagrad"
+    pm: bool = True                  # intent-managed embedding on/off
+    cache_capacity: int = 256
+    n_shards: int = 1
+    prefetch: int = 16
+    plan_every: int = 8
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
+    log_every: int = 10
+    seed: int = 0
+
+
+@dataclass
+class LoopResult:
+    losses: List[float] = field(default_factory=list)
+    plans: int = 0
+    recompiles: int = 0
+    wall_s: float = 0.0
+
+
+def train_loop(cfg: ModelConfig, lc: LoopConfig) -> LoopResult:
+    t0 = time.time()
+    key = jax.random.PRNGKey(lc.seed)
+    params = init_model(cfg, key)
+    opt_state = make_opt_init(lc.optimizer)(params)
+
+    planner = IntentPlanner(cfg.vocab_size, lc.cache_capacity,
+                            n_shards=max(1, lc.n_shards),
+                            plan_every=lc.plan_every) if lc.pm else None
+    loader = IntentSignalingLoader(
+        cfg, lc.batch, lc.seq, n_shards=max(1, lc.n_shards),
+        prefetch=lc.prefetch, planner=planner, seed=lc.seed)
+
+    step_fns: Dict[int, callable] = {}
+
+    def step_fn(miss_capacity: int):
+        if miss_capacity not in step_fns:
+            step_fns[miss_capacity] = jax.jit(make_train_step(
+                cfg, optimizer=lc.optimizer, lr=lc.lr,
+                pm_miss_capacity=miss_capacity))
+        return step_fns[miss_capacity]
+
+    res = LoopResult()
+    plan: Optional[PlacementPlan] = None
+    cache_ids = None
+
+    for step, batch in loader:
+        if step >= lc.steps:
+            break
+        if planner is not None:
+            planner.observe_round(step)
+            if planner.should_replan(step, plan):
+                plan = planner.plan(step)
+                cache_ids = jnp.asarray(plan.cache_ids)
+                res.plans += 1
+                planner.gc(step)
+            # replica sync round: re-gather hot rows from the live table
+            state = make_state(params["embed"], cache_ids)
+            batch = dict(batch,
+                         pm_cache_ids=state.cache_ids,
+                         pm_cache_rows=state.cache_rows)
+            fn = step_fn(plan.miss_capacity)
+        else:
+            fn = step_fn(0)
+        loss, params, opt_state = fn(params, opt_state, batch)
+        res.losses.append(float(loss))
+        if lc.log_every and step % lc.log_every == 0:
+            print(f"step {step:5d}  loss {float(loss):.4f}")
+        if lc.ckpt_dir and lc.ckpt_every and step and \
+                step % lc.ckpt_every == 0:
+            checkpoint.save(f"{lc.ckpt_dir}/step_{step:07d}",
+                            {"params": params, "opt": opt_state}, step)
+
+    res.recompiles = len(step_fns)
+    res.wall_s = time.time() - t0
+    return res

@@ -1,0 +1,100 @@
+"""Training and serving step builders (pjit-ready pure functions)."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward, loss_fn
+from repro.optim.optimizers import (adagrad_init, adagrad_update, adam_init,
+                                    adam_update)
+
+
+def make_train_step(cfg: ModelConfig, *, optimizer: str = "adagrad",
+                    lr: float = 0.01, pm_miss_capacity: int = 0,
+                    pm_strict: bool = False, remat: bool = True,
+                    remat_policy: str = "full",
+                    vp_loss_mesh=None, fsdp_spec=None,
+                    act_spec=None) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (loss, params, state).
+
+    ``pm_miss_capacity > 0`` activates the intent-managed embedding path
+    (batch must then carry pm_cache_ids / pm_cache_rows).
+
+    ``vp_loss_mesh``: a Mesh enables the explicit vocab-parallel CE
+    (shard_map collective schedule, `repro.models.losses`) instead of the
+    GSPMD-derived loss — §Perf iteration 3.
+    """
+    update = adagrad_update if optimizer == "adagrad" else adam_update
+
+    def train_step(params, opt_state, batch):
+        def loss(p):
+            if vp_loss_mesh is not None:
+                from repro.launch.mesh import batch_axes
+                from repro.models.losses import vocab_parallel_ce
+                h, aux, _ = forward(p, cfg, batch, remat=remat,
+                                    remat_policy=remat_policy,
+                                    pm_miss_capacity=pm_miss_capacity,
+                                    pm_strict=pm_strict, skip_head=True,
+                                    fsdp_spec=fsdp_spec, act_spec=act_spec)
+                head = p["embed"].T if cfg.tie_embeddings else p["head"]
+                return vocab_parallel_ce(
+                    h, head, batch["labels"], vp_loss_mesh,
+                    batch_axes=batch_axes(vp_loss_mesh), aux=aux)
+            logits, aux, _ = forward(p, cfg, batch, remat=remat,
+                                     remat_policy=remat_policy,
+                                     pm_miss_capacity=pm_miss_capacity,
+                                     pm_strict=pm_strict,
+                                     fsdp_spec=fsdp_spec,
+                                     act_spec=act_spec)
+            return loss_fn(logits, batch["labels"], aux)
+
+        loss_val, grads = jax.value_and_grad(loss)(params)
+        new_params, new_state = update(grads, opt_state, params, lr=lr)
+        return loss_val, new_params, new_state
+
+    return train_step
+
+
+def make_opt_init(optimizer: str = "adagrad") -> Callable:
+    return adagrad_init if optimizer == "adagrad" else adam_init
+
+
+def make_prefill_step(cfg: ModelConfig, *, last_only: bool = False,
+                      fsdp_spec=None) -> Callable:
+    """Forward-only prefill: returns last-position logits.
+
+    ``last_only=True`` slices the hidden state to the final position
+    *before* the (D, V) head matmul, so only (B, 1, V) logits are ever
+    computed/communicated instead of (B, S, V) — §Perf iteration for
+    prefill shapes (XLA does not push the slice through the collective
+    itself)."""
+
+    def prefill_step(params, batch):
+        logits, _, _ = forward(params, cfg, batch, remat=False,
+                               head_last_only=last_only,
+                               fsdp_spec=fsdp_spec)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, fsdp_spec=None) -> Callable:
+    """One decode step: consume one token per sequence against the cache.
+
+    serve_step(params, cache, tokens(B,1)) -> (logits (B, V), new_cache).
+    Advances cache["len"] itself (the new token occupies position len).
+    """
+
+    def serve_step(params, cache, tokens):
+        cache = {**cache, "len": cache["len"] + 1}
+        logits, _, new_cache = forward(params, cfg, {"tokens": tokens},
+                                       cache=cache, remat=False,
+                                       fsdp_spec=fsdp_spec)
+        return logits[:, -1], new_cache
+
+    return serve_step

@@ -1,0 +1,121 @@
+"""Property tests for the numerical core: blocked (flash-style) attention
+vs a naive softmax oracle, decode attention vs the same oracle, and the
+chunked linear scan vs a sequential reference."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import decode_attention, flash_attention
+from repro.models.ssm import _chunked_linear_scan
+
+
+def naive_attention(q, k, v, causal, window, kv_valid=None):
+    B, Sq, H, hd = q.shape
+    Skv, KvH = k.shape[1], k.shape[2]
+    rep = H // KvH
+    k = np.repeat(np.asarray(k), rep, axis=2)
+    v = np.repeat(np.asarray(v), rep, axis=2)
+    q = np.asarray(q)
+    s = np.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+    qp = np.arange(Sq)[:, None]
+    kp = np.arange(Skv)[None, :]
+    mask = np.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= qp >= kp
+    if window:
+        mask &= (qp - kp) < window
+    if kv_valid is not None:
+        mask &= kv_valid[None, :]
+    s = np.where(mask[None, None], s, -np.inf)
+    s = s - np.max(s, axis=-1, keepdims=True)
+    p = np.exp(s)
+    p = np.where(mask[None, None], p, 0.0)
+    p = p / np.maximum(p.sum(-1, keepdims=True), 1e-20)
+    return np.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+@given(
+    sq=st.integers(1, 33),
+    skv_extra=st.integers(0, 17),
+    h=st.sampled_from([1, 2, 4]),
+    kv_ratio=st.sampled_from([1, 2]),
+    causal=st.booleans(),
+    window=st.sampled_from([0, 3, 8]),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=40, deadline=None)
+def test_flash_matches_naive(sq, skv_extra, h, kv_ratio, causal, window,
+                             seed):
+    if h % kv_ratio:
+        kv_ratio = 1
+    skv = sq + skv_extra if not causal else sq
+    rng = np.random.default_rng(seed)
+    hd = 8
+    q = jnp.asarray(rng.normal(size=(2, sq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, skv, h // kv_ratio, hd)),
+                    jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, skv, h // kv_ratio, hd)),
+                    jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          q_block=8, kv_block=16)
+    exp = naive_attention(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(out), exp, rtol=2e-4, atol=2e-5)
+
+
+@given(cache_len=st.integers(1, 20), window=st.sampled_from([0, 4]),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_decode_matches_naive(cache_len, window, seed):
+    rng = np.random.default_rng(seed)
+    B, S, H, KvH, hd = 2, 24, 4, 2, 8
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(B, S, KvH, hd)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(B, S, KvH, hd)), jnp.float32)
+    out = decode_attention(q, kc, vc, jnp.asarray(cache_len),
+                           window=window)
+    valid = np.arange(S) < cache_len
+    if window:
+        valid &= np.arange(S) >= cache_len - window
+    exp = naive_attention(q, kc, vc, causal=False, window=0,
+                          kv_valid=valid)
+    np.testing.assert_allclose(np.asarray(out), exp, rtol=2e-4, atol=2e-5)
+
+
+@given(s=st.integers(1, 70), chunk=st.sampled_from([1, 4, 16, 64]),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=30, deadline=None)
+def test_chunked_scan_matches_sequential(s, chunk, seed):
+    rng = np.random.default_rng(seed)
+    B, D = 2, 3
+    a = jnp.asarray(rng.uniform(0.5, 1.0, size=(B, s, D)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, s, D)), jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
+    h, h_last = _chunked_linear_scan(a, b, h0, chunk)
+    # sequential reference
+    hs = []
+    cur = np.asarray(h0)
+    for t in range(s):
+        cur = np.asarray(a[:, t]) * cur + np.asarray(b[:, t])
+        hs.append(cur.copy())
+    exp = np.stack(hs, axis=1)
+    np.testing.assert_allclose(np.asarray(h), exp, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h_last), exp[:, -1],
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_q_offset_decode_consistency():
+    """q_offset shifts the causal mask (prefill continuation)."""
+    rng = np.random.default_rng(0)
+    B, S, H, hd = 1, 8, 2, 8
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+    # a query at absolute position S-1 sees everything
+    out = flash_attention(q, k, v, causal=True, q_offset=S - 1)
+    exp = naive_attention(q, k, v, causal=False, window=0)
+    np.testing.assert_allclose(np.asarray(out), exp, rtol=2e-4, atol=2e-5)

@@ -1,0 +1,137 @@
+"""Tests for the dry-run machinery: HLO collective parser (synthetic
+inputs), skip logic, input specs, sharding rules, and — once per test
+session — one real lower+compile on the production mesh in a subprocess
+(the 512-device XLA flag must be set before jax initializes)."""
+
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+# NOTE: this module must not import jax-device-state-dependent parts of
+# dryrun at module scope in-process; parser helpers are pure.
+from repro.launch.dryrun import (_split_computations, collective_bytes,
+                                 skip_reason)
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES
+
+
+SYNTH_HLO = """\
+%region_0.1_spmd (param: (s32[], f32[64,128])) -> (s32[], f32[64,128]) {
+  %all-gather = f32[64,512]{0,1} all-gather(%copy), channel_id=1
+  ROOT %t = (s32[], f32[64,128]) tuple(%a, %b)
+}
+%region_1.2_spmd (param.1: (s32[], f32[64,128])) -> pred[] {
+  %constant.18 = s32[] constant(7)
+  ROOT %cmp = pred[] compare(%gte, %constant.18), direction=LT
+}
+ENTRY %main.4_spmd (param.2: f32[64,512]) -> f32[] {
+  %while.8 = (s32[], f32[64,128]) while(%tuple.4), condition=%region_1.2_spmd, body=%region_0.1_spmd
+  %all-reduce.1 = f32[128,256]{1,0} all-reduce(%x), channel_id=3
+  ROOT %r = f32[] reduce(%y)
+}
+"""
+
+
+class TestCollectiveParser:
+    def test_split_computations(self):
+        blocks = _split_computations(SYNTH_HLO)
+        assert set(blocks) == {"%region_0.1_spmd", "%region_1.2_spmd",
+                               "%main.4_spmd"}
+
+    def test_trip_count_scaling(self):
+        per_op = collective_bytes(SYNTH_HLO, default_trip=99.0)
+        # all-gather inside the while body: 64*512*4 bytes x trip 7
+        assert per_op["all-gather"] == pytest.approx(64 * 512 * 4 * 7)
+        # all-reduce in main: 2x result bytes, no trip scaling
+        assert per_op["all-reduce"] == pytest.approx(2 * 128 * 256 * 4)
+
+    def test_default_trip_fallback(self):
+        hlo = SYNTH_HLO.replace("%constant.18 = s32[] constant(7)", "")
+        per_op = collective_bytes(hlo, default_trip=5.0)
+        assert per_op["all-gather"] == pytest.approx(64 * 512 * 4 * 5)
+
+    def test_bf16_and_tuple_shapes(self):
+        hlo = ("ENTRY %main (p: bf16[4,8]) -> bf16[4,8] {\n"
+               "  %all-to-all = (bf16[4,8]{1,0}, bf16[4,8]{1,0}) "
+               "all-to-all(%a, %b), channel_id=1\n}\n")
+        per_op = collective_bytes(hlo)
+        assert per_op["all-to-all"] == pytest.approx(2 * 4 * 8 * 2)
+
+
+class TestSkipLogic:
+    def test_long_500k_skips_full_attention(self):
+        for arch in ("llama3-405b", "granite-20b", "whisper-medium",
+                     "qwen3-moe-30b-a3b"):
+            assert skip_reason(get_config(arch), SHAPES["long_500k"])
+
+    def test_long_500k_runs_subquadratic(self):
+        for arch in ("falcon-mamba-7b", "zamba2-1.2b", "mixtral-8x22b"):
+            assert skip_reason(get_config(arch), SHAPES["long_500k"]) is None
+
+    def test_all_other_shapes_never_skip(self):
+        for arch in ARCH_IDS:
+            for s in ("train_4k", "prefill_32k", "decode_32k"):
+                assert skip_reason(get_config(arch), SHAPES[s]) is None
+
+
+class TestShardingRules:
+    def test_param_specs_divisibility(self):
+        """No spec ever assigns a mesh axis to a non-dividing dim."""
+        import jax
+        from repro.launch.mesh import make_production_mesh
+        from repro.launch.sharding import param_pspecs
+        from repro.launch.dryrun import params_specs
+        mesh = make_production_mesh()
+        sizes = dict(mesh.shape)
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            sds = params_specs(cfg)
+            specs = param_pspecs(sds, cfg, mesh)
+
+            def check(path, leaf_spec, leaf_sds):
+                for dim, ax in zip(leaf_sds.shape, tuple(leaf_spec)):
+                    if ax is None:
+                        continue
+                    axes = ax if isinstance(ax, tuple) else (ax,)
+                    n = 1
+                    for a in axes:
+                        n *= sizes[a]
+                    assert dim % n == 0, (arch, path, leaf_sds.shape,
+                                          tuple(leaf_spec))
+
+            jax.tree_util.tree_map_with_path(check, specs, sds)
+
+    def test_vocab_sharded_when_divisible(self):
+        import jax
+        from repro.launch.mesh import make_production_mesh
+        from repro.launch.sharding import param_pspecs
+        from repro.launch.dryrun import params_specs
+        mesh = make_production_mesh()
+        cfg = get_config("nemotron-4-15b")  # V=256000 divides 16
+        specs = param_pspecs(params_specs(cfg), cfg, mesh,
+                             zero_embed_head=False)
+        assert tuple(specs["embed"]) [0] == "model"
+        cfg_w = get_config("whisper-medium")  # V=51865 does not divide
+        specs_w = param_pspecs(params_specs(cfg_w), cfg_w, mesh,
+                               zero_embed_head=False)
+        assert tuple(specs_w["embed"])[0] is None
+
+
+@pytest.mark.slow
+def test_real_dryrun_one_pair_subprocess(tmp_path):
+    """One real lower+compile on the 16x16 production mesh (subprocess so
+    the 512-host-device XLA flag applies before jax init)."""
+    out = tmp_path / "dr.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "smollm-135m", "--shape", "decode_32k", "--out", str(out)],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"})
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    rec = json.loads(out.read_text())[0]
+    assert rec["status"] == "ok"
+    assert rec["n_devices"] == 256
+    assert rec["collective_bytes"] > 0

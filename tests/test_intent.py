@@ -1,0 +1,109 @@
+"""Tests for intent signaling primitives (paper §3)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.intent import Intent, IntentTable, IntentType, LogicalClock
+from repro.core.ownership import OwnershipDirectory, home_node
+
+
+class TestIntent:
+    def test_states(self):
+        it = Intent(keys=(13, 16), c_start=2, c_end=3, worker_id=0)
+        assert it.state(1) == "inactive"
+        assert it.state(2) == "active"
+        assert it.state(3) == "expired"
+
+    def test_empty_window_rejected(self):
+        with pytest.raises(ValueError):
+            Intent(keys=(1,), c_start=5, c_end=5, worker_id=0)
+
+    def test_types_exist(self):
+        for t in (IntentType.READ, IntentType.WRITE, IntentType.READ_WRITE):
+            Intent(keys=(1,), c_start=0, c_end=1, worker_id=0, type=t)
+
+
+class TestLogicalClock:
+    def test_advance(self):
+        c = LogicalClock()
+        assert c.advance() == 1
+        assert c.advance(5) == 6
+        with pytest.raises(ValueError):
+            c.advance(-1)
+
+
+class TestIntentTable:
+    def test_active_and_future(self):
+        t = IntentTable()
+        t.signal(Intent(keys=(7,), c_start=2, c_end=4, worker_id=0))
+        t.signal(Intent(keys=(7,), c_start=10, c_end=11, worker_id=1))
+        clocks = {0: 3, 1: 0}
+        assert t.has_active(7, clocks)
+        assert t.active_workers(7, clocks) == {0}
+        assert t.earliest_future_start(7, clocks) == (10, 1)
+
+    def test_overlapping_intents_combine(self):
+        """Workers can extend intents by signaling again (§3)."""
+        t = IntentTable()
+        t.signal(Intent(keys=(1,), c_start=0, c_end=2, worker_id=0))
+        t.signal(Intent(keys=(1,), c_start=1, c_end=5, worker_id=0))
+        assert t.has_active(1, {0: 3})     # covered by the extension
+        assert not t.has_active(1, {0: 5})
+
+    def test_gc(self):
+        t = IntentTable()
+        t.signal(Intent(keys=(1, 2), c_start=0, c_end=2, worker_id=0))
+        t.gc({0: 2})
+        assert len(t) == 0
+
+    @given(windows=st.lists(
+        st.tuples(st.integers(0, 20), st.integers(1, 10), st.integers(0, 3)),
+        min_size=1, max_size=30),
+        clock=st.integers(0, 40))
+    @settings(max_examples=100, deadline=None)
+    def test_active_matches_bruteforce(self, windows, clock):
+        t = IntentTable()
+        for (s, dur, w) in windows:
+            t.signal(Intent(keys=(0,), c_start=s, c_end=s + dur, worker_id=w))
+        clocks = {w: clock for _, _, w in windows}
+        expected = {w for (s, dur, w) in windows if s <= clock < s + dur}
+        assert t.active_workers(0, clocks) == expected
+        assert t.has_active(0, clocks) == bool(expected)
+
+
+class TestOwnership:
+    def test_home_node_stable_and_spread(self):
+        homes = [home_node(k, 8) for k in range(10_000)]
+        assert homes == [home_node(k, 8) for k in range(10_000)]
+        counts = [homes.count(n) for n in range(8)]
+        assert min(counts) > 0.5 * 10_000 / 8  # roughly balanced
+
+    def test_route_direct_after_cache_refresh(self):
+        d = OwnershipDirectory(4)
+        key = 42
+        owner0 = d.owner_of(key)
+        other = (owner0 + 1) % 4
+        d.relocate(key, other)
+        # first message goes via a stale view, later ones are direct
+        hops1 = d.route((other + 1) % 4, key)
+        hops2 = d.route((other + 1) % 4, key)
+        assert hops1 >= hops2 == 1
+
+    def test_owner_routes_free(self):
+        d = OwnershipDirectory(4)
+        k = 7
+        assert d.route(d.owner_of(k), k) == 0
+
+    @given(moves=st.lists(st.integers(0, 7), min_size=0, max_size=20))
+    @settings(max_examples=50, deadline=None)
+    def test_home_always_knows_owner(self, moves):
+        """The home-node fallback is always correct: routing terminates with
+        a bounded hop count no matter how often the key relocated."""
+        d = OwnershipDirectory(8)
+        k = 1234
+        for m in moves:
+            d.relocate(k, m)
+        for src in range(8):
+            assert d.route(src, k) <= 3
+            # after one round trip the cache is fresh
+            assert d.route(src, k) <= 1

@@ -1,0 +1,179 @@
+"""Scenario tests for AdaPM's adaptive choice of technique (paper §4.1,
+Figure 4) and its communication discipline (§B.2.4)."""
+
+import pytest
+
+from repro.core.api import CostModel
+from repro.core.intent import Intent
+from repro.core.manager import AdaPM
+from repro.core.ownership import home_node
+
+
+def key_with_home(node: int, n_nodes: int, start: int = 0) -> int:
+    k = start
+    while home_node(k, n_nodes) != node:
+        k += 1
+    return k
+
+
+def mk(n_nodes=3, **kw):
+    kw.setdefault("lam0", 1.0)
+    return AdaPM(n_nodes, CostModel(), **kw)
+
+
+def set_clock(pm, node, worker, clock):
+    pm.advance_clock(node, worker, clock)
+
+
+class TestFig4Scenarios:
+    def test_4b_nonoverlapping_relocation(self):
+        """Two nodes, non-overlapping intents: relocate to the first, keep
+        it there after expiry, relocate to the second before activation."""
+        pm = mk()
+        k = key_with_home(0, 3)
+        w1, w2 = 100, 200
+        set_clock(pm, 1, w1, 0)
+        set_clock(pm, 2, w2, 0)
+        pm.signal_intent(1, Intent(keys=(k,), c_start=2, c_end=4,
+                                   worker_id=w1), 0.0)
+        pm.signal_intent(2, Intent(keys=(k,), c_start=60, c_end=62,
+                                   worker_id=w2), 0.0)
+        pm.run_round(0.0, 1e-3)
+        assert pm.dir.owner_of(k) == 1          # relocated to node 1
+        assert k not in pm._repl or not pm._repl[k].holders
+        # node 1's intent expires; parameter stays where it is (§4.1)
+        set_clock(pm, 1, w1, 5)
+        pm.run_round(1e-3, 1e-3)
+        assert pm.dir.owner_of(k) == 1
+        # node 2 approaches its window; relocation happens proactively
+        set_clock(pm, 2, w2, 55)
+        pm.run_round(2e-3, 1e-3)
+        pm.run_round(3e-3, 1e-3)
+        assert pm.dir.owner_of(k) == 2
+        assert pm.metrics.n_relocations == 2
+        assert pm.metrics.n_replica_creates == 0
+
+    def test_4c_partial_overlap_replica_then_relocate(self):
+        """Partial overlap: relocate to first, replica on second during the
+        overlap, relocate to second after the first's intent expires."""
+        pm = mk()
+        k = key_with_home(0, 3)
+        w1, w2 = 100, 200
+        set_clock(pm, 1, w1, 0)
+        set_clock(pm, 2, w2, 0)
+        pm.signal_intent(1, Intent(keys=(k,), c_start=0, c_end=10,
+                                   worker_id=w1), 0.0)
+        pm.signal_intent(2, Intent(keys=(k,), c_start=5, c_end=15,
+                                   worker_id=w2), 0.0)
+        pm.run_round(0.0, 1e-3)
+        assert pm.dir.owner_of(k) == 1
+        assert pm._repl[k].holders == {2}       # replica during overlap
+        # node 1 expires while node 2 is still active -> relocate to node 2
+        set_clock(pm, 1, w1, 10)
+        set_clock(pm, 2, w2, 7)
+        pm.run_round(1e-3, 1e-3)
+        assert pm.dir.owner_of(k) == 2
+        assert not pm._repl.get(k, None) or not pm._repl[k].holders
+
+    def test_4d_concurrent_replicas_everywhere(self):
+        """Multiple concurrent intents: replicas exactly on active nodes."""
+        pm = mk(n_nodes=4)
+        k = key_with_home(0, 4)
+        for node in range(4):
+            w = 100 + node
+            set_clock(pm, node, w, 0)
+            pm.signal_intent(node, Intent(keys=(k,), c_start=0, c_end=10,
+                                          worker_id=w), 0.0)
+        pm.run_round(0.0, 1e-3)
+        assert pm.dir.owner_of(k) == 0           # owner keeps it (own intent)
+        assert pm._repl[k].holders == {1, 2, 3}
+        # expiry destroys replicas precisely when intent ends (§4.1)
+        for node in range(1, 4):
+            set_clock(pm, node, 100 + node, 10)
+        pm.run_round(1e-3, 1e-3)
+        assert not pm._repl.get(k, None) or not pm._repl[k].holders
+
+
+class TestCommunicationDiscipline:
+    def test_no_relocation_while_replicas_exist(self):
+        """§B.2.4: concurrent active intent -> replication, never relocation
+        (even when a later activation is the only non-owner one)."""
+        pm = mk(n_nodes=3)
+        k = key_with_home(0, 3)
+        set_clock(pm, 0, 10, 0)
+        set_clock(pm, 1, 11, 0)
+        set_clock(pm, 2, 12, 0)
+        pm.signal_intent(0, Intent(keys=(k,), c_start=0, c_end=20,
+                                   worker_id=10), 0.0)
+        pm.signal_intent(1, Intent(keys=(k,), c_start=0, c_end=20,
+                                   worker_id=11), 0.0)
+        pm.run_round(0.0, 1e-3)
+        owner_before = pm.dir.owner_of(k)
+        pm.signal_intent(2, Intent(keys=(k,), c_start=1, c_end=5,
+                                   worker_id=12), 0.0)
+        pm.run_round(1e-3, 1e-3)
+        assert pm.dir.owner_of(k) == owner_before
+        assert 2 in pm._repl[k].holders
+        assert pm.metrics.n_relocations == 0
+
+    def test_optional_intent_remote_access(self):
+        """Accesses without intent work, but are synchronous+remote (§4)."""
+        pm = mk(n_nodes=2)
+        k = key_with_home(0, 2)
+        res = pm.access(1, 0, k, 0.0)
+        assert not res.local
+        assert pm.metrics.n_remote == 1
+        res = pm.access(0, 0, k, 0.0)
+        assert res.local
+
+    def test_replica_access_counts_staleness(self):
+        pm = mk(n_nodes=2)
+        k = key_with_home(0, 2)
+        set_clock(pm, 0, 0, 0)
+        set_clock(pm, 1, 1, 0)
+        pm.signal_intent(0, Intent(keys=(k,), c_start=0, c_end=9,
+                                   worker_id=0), 0.0)
+        pm.signal_intent(1, Intent(keys=(k,), c_start=0, c_end=9,
+                                   worker_id=1), 0.0)
+        pm.run_round(0.0, 1e-3)
+        res = pm.access(1, 1, k, 5e-3)
+        assert res.local and res.staleness == pytest.approx(5e-3)
+
+    def test_ablation_no_replication_falls_back_to_remote(self):
+        pm = mk(n_nodes=3, replication=False)
+        k = key_with_home(0, 3)
+        for node in (1, 2):
+            w = 10 + node
+            set_clock(pm, node, w, 0)
+            pm.signal_intent(node, Intent(keys=(k,), c_start=0, c_end=9,
+                                          worker_id=w), 0.0)
+        pm.run_round(0.0, 1e-3)
+        # exactly one of the two got the parameter; the other goes remote
+        owner = pm.dir.owner_of(k)
+        assert owner in (1, 2)
+        other = 3 - owner
+        assert pm.access(owner, 0, k, 0.0).local
+        assert not pm.access(other, 0, k, 0.0).local
+        assert pm.metrics.n_replica_creates == 0
+
+    def test_ablation_no_relocation_keeps_home(self):
+        pm = mk(n_nodes=3, relocation=False)
+        k = key_with_home(0, 3)
+        set_clock(pm, 1, 11, 0)
+        pm.signal_intent(1, Intent(keys=(k,), c_start=0, c_end=9,
+                                   worker_id=11), 0.0)
+        pm.run_round(0.0, 1e-3)
+        assert pm.dir.owner_of(k) == 0           # never relocates
+        assert pm._repl[k].holders == {1}        # replicates instead
+        assert pm.metrics.n_relocations == 0
+
+    def test_trace_records_events(self):
+        pm = AdaPM(2, CostModel(), lam0=1.0, trace_keys={5})
+        k = 5
+        node = 1 - home_node(k, 2)
+        set_clock(pm, node, 0, 0)
+        pm.signal_intent(node, Intent(keys=(k,), c_start=0, c_end=3,
+                                      worker_id=0), 0.0)
+        pm.run_round(0.0, 1e-3)
+        assert any(ev in ("relocate-in", "replica-create")
+                   for (_, _, _, ev) in pm.trace)

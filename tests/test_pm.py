@@ -1,0 +1,144 @@
+"""Tests for the JAX PM layer: intent-managed embedding + host planner."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.pm.embedding import (EmbedPMState, make_state, pm_lookup,
+                                plain_lookup, refresh_cache)
+from repro.pm.planner import IntentPlanner, PlacementPlan
+
+V, D, C = 256, 32, 16
+
+
+def setup_state(seed=0, cache_ids=None):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(size=(V, D)), dtype=jnp.float32)
+    if cache_ids is None:
+        cache_ids = np.sort(rng.choice(V, size=C, replace=False))
+    cache_ids = jnp.asarray(cache_ids, dtype=jnp.int32)
+    return make_state(table, cache_ids), rng
+
+
+class TestPMLookup:
+    def test_matches_plain_lookup_fresh_cache(self):
+        """With a synchronized cache, managed == unmanaged, for any mix of
+        hits and misses."""
+        state, rng = setup_state()
+        tokens = jnp.asarray(rng.integers(0, V, size=(4, 8)), jnp.int32)
+        out = pm_lookup(state.table, state.cache_ids, state.cache_rows,
+                        tokens, 64)
+        exp = plain_lookup(state.table, tokens)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=1e-6)
+
+    def test_overflow_fallback_correct(self):
+        """Misses beyond the planned capacity must still read exact rows."""
+        state, rng = setup_state()
+        tokens = jnp.asarray(rng.integers(0, V, size=(4, 16)), jnp.int32)
+        out = pm_lookup(state.table, state.cache_ids, state.cache_rows,
+                        tokens, 2)   # absurdly small miss buffer
+        exp = plain_lookup(state.table, tokens)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=1e-6)
+
+    def test_cache_hit_uses_cache_value(self):
+        """Stale replicas serve reads (bounded staleness, §B.1.2): if the
+        cache holds a different value, hits return it."""
+        state, rng = setup_state()
+        poisoned = state.cache_rows.at[:].set(7.0)
+        hit_id = int(state.cache_ids[0])
+        tokens = jnp.full((1, 4), hit_id, dtype=jnp.int32)
+        out = pm_lookup(state.table, state.cache_ids, poisoned, tokens, 8)
+        np.testing.assert_allclose(np.asarray(out), 7.0)
+
+    def test_gradients_flow_to_table_only(self):
+        """Replica write-back: all row grads reach the owner table; the
+        cache gets none (it is re-gathered, not trained)."""
+        state, rng = setup_state()
+        tokens = jnp.asarray(rng.integers(0, V, size=(2, 6)), jnp.int32)
+
+        def loss(table, rows):
+            out = pm_lookup(table, state.cache_ids, rows, tokens, 16)
+            return jnp.sum(out ** 2)
+
+        gt, gr = jax.grad(loss, argnums=(0, 1))(state.table,
+                                                state.cache_rows)
+        # equivalent plain-embedding gradient
+        gt_ref = jax.grad(
+            lambda t: jnp.sum(plain_lookup(t, tokens) ** 2))(state.table)
+        np.testing.assert_allclose(np.asarray(gt), np.asarray(gt_ref),
+                                   rtol=1e-5)
+        assert float(jnp.max(jnp.abs(gr))) == 0.0
+
+    def test_refresh_restores_equivalence(self):
+        """After a table update, one refresh round resynchronizes replicas
+        (staleness bounded by one round)."""
+        state, rng = setup_state()
+        new_table = state.table * 2.0
+        stale = EmbedPMState(new_table, state.cache_ids, state.cache_rows)
+        fresh = refresh_cache(stale)
+        hit_id = int(state.cache_ids[3])
+        tokens = jnp.full((1, 1), hit_id, dtype=jnp.int32)
+        out = pm_lookup(fresh.table, fresh.cache_ids, fresh.cache_rows,
+                        tokens, 4)
+        np.testing.assert_allclose(
+            np.asarray(out)[0, 0], np.asarray(new_table[hit_id]), rtol=1e-6)
+
+    @given(seed=st.integers(0, 2**16), b=st.integers(1, 4),
+           s=st.integers(1, 32), m=st.sampled_from([1, 4, 16, 128]))
+    @settings(max_examples=40, deadline=None)
+    def test_property_exactness_any_capacity(self, seed, b, s, m):
+        """pm_lookup == plain lookup for every (batch, seq, capacity)."""
+        state, rng = setup_state(seed)
+        tokens = jnp.asarray(rng.integers(0, V, size=(b, s)), jnp.int32)
+        out = pm_lookup(state.table, state.cache_ids, state.cache_rows,
+                        tokens, m)
+        exp = plain_lookup(state.table, tokens)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=1e-6)
+
+
+class TestPlanner:
+    def test_multi_shard_keys_replicated(self):
+        pl = IntentPlanner(vocab_size=1000, cache_capacity=8, n_shards=4)
+        for step in range(6):
+            for shard in range(4):
+                # keys 1,2,3 hit by all shards; 100+shard unique per shard
+                pl.signal(step, shard, np.array([1, 2, 3, 100 + shard]))
+        plan = pl.plan(0)
+        cached = set(int(i) for i in plan.cache_ids if i < 1000)
+        assert {1, 2, 3} <= cached
+        assert all(k not in cached for k in (100, 101, 102, 103))
+
+    def test_miss_capacity_from_intent_exact(self):
+        pl = IntentPlanner(vocab_size=1000, cache_capacity=4, n_shards=2)
+        for step in range(4):
+            pl.signal(step, 0, np.array([1, 2, 50, 51, 52]))
+            pl.signal(step, 1, np.array([1, 2, 60, 61]))
+        plan = pl.plan(0)
+        cached = set(int(i) for i in plan.cache_ids if i < 1000)
+        # worst per-shard miss count is 3 (50,51,52) -> bucket >= 3
+        assert plan.miss_capacity >= 3
+        assert {1, 2} <= cached
+
+    def test_replan_follows_algorithm1_horizon(self):
+        pl = IntentPlanner(vocab_size=100, cache_capacity=4, n_shards=2,
+                           lam0=5.0)
+        for s in range(200):
+            for sh in range(2):
+                pl.signal(s, sh, np.array([1, 2]))
+        plan = pl.plan(0)
+        assert not pl.should_replan(0, plan)
+        # after the window is nearly consumed, a replan is required
+        late = plan.window[1]
+        assert pl.should_replan(late, plan)
+
+    def test_plan_version_monotone(self):
+        pl = IntentPlanner(vocab_size=100, cache_capacity=4, n_shards=2)
+        pl.signal(0, 0, np.array([1]))
+        v1 = pl.plan(0).version
+        v2 = pl.plan(0).version
+        assert v2 > v1

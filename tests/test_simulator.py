@@ -1,0 +1,144 @@
+"""Integration + property tests for the cluster simulator and the PM
+baselines, checking the paper's qualitative claims at test scale."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.api import CostModel
+from repro.core.baselines import (NuPSStatic, SelectiveReplicationSSP,
+                                  StaticFullReplication, StaticPartitioning)
+from repro.core.manager import AdaPM
+from repro.core.simulator import (SimConfig, Workload, simulate,
+                                  single_node_epoch_time)
+from repro.data.workloads import make_workload
+
+
+def tiny_workload(n_nodes=2, wpn=1, n_batches=30, n_keys=500, kpb=8, seed=0):
+    rng = np.random.default_rng(seed)
+    streams = [[[np.unique(rng.integers(0, n_keys, size=kpb))
+                 for _ in range(n_batches)]
+                for _ in range(wpn)]
+               for _ in range(n_nodes)]
+    return Workload("tiny", n_keys, streams)
+
+
+def total_accesses(wl):
+    return sum(len(b) for ns in wl.streams for s in ns for b in s)
+
+
+COST = CostModel()
+CFG = SimConfig(signal_offset=20)
+
+
+class TestSimulatorInvariants:
+    def test_all_accesses_processed(self):
+        wl = tiny_workload()
+        m = simulate(AdaPM(2, COST), wl, CFG)
+        assert m.n_accesses == total_accesses(wl)
+        assert m.epoch_time > 0
+        assert m.rounds > 0
+
+    def test_static_partitioning_remote_share(self):
+        """Hash partitioning: ~ (n-1)/n of uniform accesses are remote."""
+        wl = tiny_workload(n_nodes=4, n_batches=50, n_keys=2000)
+        m = simulate(StaticPartitioning(4, COST), wl, CFG)
+        assert m.remote_fraction == pytest.approx(0.75, abs=0.08)
+
+    def test_full_replication_all_local_but_stale(self):
+        wl = tiny_workload()
+        m = simulate(StaticFullReplication(2, COST, wl.n_keys), wl, CFG)
+        assert m.remote_fraction == 0.0
+        assert m.mean_staleness > 0.0
+
+    def test_full_replication_oom_flag(self):
+        cost = CostModel(node_mem_bytes=1024)  # absurdly small node
+        wl = tiny_workload()
+        pol = StaticFullReplication(2, cost, wl.n_keys)
+        assert pol.metrics.oom
+
+    def test_adapm_avoids_remote_accesses(self):
+        """The paper's headline mechanism: with intent signaled early and
+        adaptive timing, (almost) no synchronous remote accesses remain."""
+        wl = tiny_workload(n_nodes=2, n_batches=60)
+        m = simulate(AdaPM(2, COST), wl, SimConfig(signal_offset=30))
+        assert m.remote_fraction < 0.05
+
+    def test_adapm_beats_static_partitioning(self):
+        wl = make_workload("KGE", n_nodes=2, wpn=2, scale=0.2)
+        m_ada = simulate(AdaPM(2, COST), wl, CFG)
+        m_sp = simulate(StaticPartitioning(2, COST), wl, CFG)
+        assert m_ada.epoch_time < m_sp.epoch_time
+        assert m_ada.remote_fraction < m_sp.remote_fraction
+
+    def test_single_node_time_positive(self):
+        wl = tiny_workload()
+        assert single_node_epoch_time(wl, COST) > 0
+
+    @given(seed=st.integers(0, 2**16), n_nodes=st.sampled_from([2, 3, 4]),
+           kpb=st.integers(2, 16))
+    @settings(max_examples=15, deadline=None)
+    def test_property_epoch_completes_and_metrics_sane(self, seed, n_nodes,
+                                                       kpb):
+        wl = tiny_workload(n_nodes=n_nodes, n_batches=15, n_keys=300,
+                           kpb=kpb, seed=seed)
+        for policy in (AdaPM(n_nodes, COST),
+                       StaticPartitioning(n_nodes, COST),
+                       SelectiveReplicationSSP(n_nodes, COST, 10)):
+            m = simulate(policy, wl, SimConfig(signal_offset=10))
+            assert m.n_accesses == total_accesses(wl)
+            assert 0.0 <= m.remote_fraction <= 1.0
+            assert np.isfinite(m.epoch_time) and m.epoch_time > 0
+            assert m.total_bytes >= 0
+
+
+class TestPaperClaims:
+    """Scaled-down checks of §5's qualitative results."""
+
+    def test_mf_relocation_benefit(self):
+        """Table 2 / §5.5: on the locality-heavy MF task, AdaPM (with
+        relocation) communicates substantially less than replication-only
+        AdaPM, and is not slower."""
+        wl = make_workload("MF", n_nodes=4, wpn=2, scale=0.4)
+        m_full = simulate(AdaPM(4, COST), wl, SimConfig(signal_offset=60))
+        m_norel = simulate(AdaPM(4, COST, relocation=False), wl,
+                           SimConfig(signal_offset=60))
+        assert m_full.total_bytes < 0.7 * m_norel.total_bytes
+        assert m_full.epoch_time <= 1.3 * m_norel.epoch_time
+
+    def test_relocation_only_slow_on_hotspots(self):
+        """§5.5: AdaPM w/o replication is inefficient (hot spots)."""
+        wl = make_workload("CTR", n_nodes=4, wpn=2, scale=0.25)
+        m_full = simulate(AdaPM(4, COST), wl, SimConfig(signal_offset=60))
+        m_norep = simulate(AdaPM(4, COST, replication=False), wl,
+                           SimConfig(signal_offset=60))
+        assert m_norep.epoch_time > 1.5 * m_full.epoch_time
+        assert m_norep.remote_fraction > m_full.remote_fraction
+
+    def test_adapm_staleness_below_full_replication(self):
+        wl = make_workload("KGE", n_nodes=2, wpn=2, scale=0.2)
+        m_ada = simulate(AdaPM(2, COST), wl, CFG)
+        m_fr = simulate(StaticFullReplication(2, COST, wl.n_keys), wl, CFG)
+        assert m_ada.mean_staleness < m_fr.mean_staleness
+
+    def test_nups_hot_keys_always_local(self):
+        wl = make_workload("WV", n_nodes=2, wpn=1, scale=0.2)
+        hot = wl.hot_keys(0.05)
+        pol = NuPSStatic(2, COST, wl.n_keys, hot, reloc_offset=50)
+        simulate(pol, wl, SimConfig(signal_offset=60))
+        for k in list(hot)[:10]:
+            assert pol.access(0, 0, k, 0.0).local
+            assert pol.access(1, 0, k, 0.0).local
+
+
+class TestQualityHarness:
+    def test_staleness_degrades_convergence(self):
+        """Figure 6's quality axis: per-round replica sync (AdaPM's bound)
+        converges like the oracle; infrequent dense sync stagnates."""
+        import sys, os
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+        from benchmarks.quality_mf import run_mf
+        tight = run_mf(sync_every=1, rounds=40)
+        loose = run_mf(sync_every=20, rounds=40)
+        assert tight[-1] < 0.1
+        assert loose[-1] > 1.5 * tight[-1]

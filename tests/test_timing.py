@@ -1,0 +1,119 @@
+"""Unit + property tests for adaptive action timing (paper §4.2, Alg. 1)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.timing import ActionTimer, poisson_quantile
+
+
+class TestPoissonQuantile:
+    def test_zero_rate(self):
+        assert poisson_quantile(0.0, 0.9999) == 0
+
+    def test_exact_small(self):
+        # lam=1: cdf(0)=.3679, cdf(1)=.7358, cdf(2)=.9197, cdf(3)=.9810,
+        # cdf(4)=.99634, cdf(5)=.99941, cdf(6)=.999917
+        assert poisson_quantile(1.0, 0.5) == 1
+        assert poisson_quantile(1.0, 0.9) == 2
+        assert poisson_quantile(1.0, 0.99) == 4
+        assert poisson_quantile(1.0, 0.9999) == 6
+
+    def test_median_near_rate(self):
+        for lam in [2.0, 5.0, 20.0, 50.0]:
+            q = poisson_quantile(lam, 0.5)
+            assert abs(q - lam) <= max(2, 0.2 * lam)
+
+    @given(lam=st.floats(min_value=0.01, max_value=500.0),
+           p=st.sampled_from([0.9, 0.99, 0.999, 0.9999]))
+    @settings(max_examples=200, deadline=None)
+    def test_upper_bound_property(self, lam, p):
+        """High quantiles sit above the mean and grow with p and lam."""
+        q = poisson_quantile(lam, p)
+        assert q >= math.floor(lam)
+        assert poisson_quantile(lam, 0.9999) >= poisson_quantile(lam, 0.9)
+        assert poisson_quantile(2 * lam, p) >= q
+
+    @given(lam=st.floats(min_value=0.1, max_value=63.0))
+    @settings(max_examples=100, deadline=None)
+    def test_exact_region_is_true_quantile(self, lam):
+        """In the exact-summation region the result is the true quantile."""
+        p = 0.999
+        q = poisson_quantile(lam, p)
+        # CDF(q) >= p and CDF(q-1) < p
+        def cdf(k):
+            pmf = math.exp(-lam)
+            tot = pmf
+            for i in range(1, k + 1):
+                pmf *= lam / i
+                tot += pmf
+            return tot
+        assert cdf(q) >= p - 1e-12
+        if q > 0:
+            assert cdf(q - 1) < p
+
+
+class TestActionTimer:
+    def test_smoothing_update(self):
+        t = ActionTimer(alpha=0.1, lam0=10.0)
+        t.observe_round(0, 20)  # delta 20
+        assert t.rate(0) == pytest.approx(0.9 * 10.0 + 0.1 * 20.0)
+
+    def test_no_update_on_zero_delta(self):
+        """§4.2.2: paused workers must not shrink the estimate."""
+        t = ActionTimer(alpha=0.1, lam0=10.0)
+        t.observe_round(0, 5)
+        lam = t.rate(0)
+        for _ in range(50):
+            t.observe_round(0, 5)  # clock stuck
+        assert t.rate(0) == pytest.approx(lam)
+
+    def test_max_heuristic_escapes_slow_regime(self):
+        """If the last observed delta exceeds the estimate, the horizon uses
+        the observation (Alg. 1 ``max(lam_hat, Delta)``)."""
+        t = ActionTimer(alpha=0.1, lam0=1.0)
+        t.observe_round(0, 100)  # sudden jump: delta=100 >> lam_hat
+        lam_used = 2.0 * max(t.rate(0), 100)
+        from repro.core.timing import poisson_quantile as q
+        assert t.horizon(0) == q(lam_used, t.p)
+
+    def test_should_act_boundary(self):
+        t = ActionTimer(lam0=10.0)
+        h = t.horizon(0)
+        clock = 50
+        t._est(0).last_clock = clock
+        assert t.should_act(0, clock, clock + h - 1)
+        assert not t.should_act(0, clock, clock + h)
+
+    def test_act_early_not_late(self):
+        """With a steady clock rate, the horizon must cover at least two
+        rounds of advancement at any reasonable quantile (err-early bias)."""
+        t = ActionTimer(alpha=0.1, p=0.9999, lam0=10.0)
+        clock = 0
+        for _ in range(100):
+            clock += 10
+            t.observe_round(0, clock)
+        assert t.horizon(0) >= 20  # 2 rounds' worth of clocks
+
+    @given(deltas=st.lists(st.integers(min_value=0, max_value=200),
+                           min_size=1, max_size=100))
+    @settings(max_examples=100, deadline=None)
+    def test_estimate_bounded_by_observations(self, deltas):
+        """The smoothed rate stays within [min_obs, max(lam0, max_obs)]."""
+        t = ActionTimer(alpha=0.1, lam0=10.0)
+        clock = 0
+        for d in deltas:
+            clock += d
+            t.observe_round(0, clock)
+        pos = [d for d in deltas if d > 0]
+        if pos:
+            lo = min(min(pos), 10.0)
+            hi = max(max(pos), 10.0)
+            assert lo - 1e-9 <= t.rate(0) <= hi + 1e-9
+
+    def test_monotone_clock_enforced(self):
+        t = ActionTimer()
+        t.observe_round(0, 10)
+        with pytest.raises(ValueError):
+            t.observe_round(0, 5)
