@@ -61,18 +61,22 @@ def make_policy(name: str, n_nodes: int, cost: CostModel,
 
 def run_one(policy_name: str, task: str, n_nodes: int = 8, wpn: int = 4,
             scale: float = 1.0, signal_offset: int = 100,
-            cost: Optional[CostModel] = None, **kw) -> Metrics:
+            cost: Optional[CostModel] = None, n_keys: Optional[int] = None,
+            **kw) -> Metrics:
     cost = cost or default_cost()
-    wl = make_workload(task, n_nodes=n_nodes, wpn=wpn, scale=scale)
+    wl = make_workload(task, n_nodes=n_nodes, wpn=wpn, scale=scale,
+                       n_keys=n_keys)
     pol = make_policy(policy_name, n_nodes, cost, wl, **kw)
     return simulate(pol, wl, SimConfig(signal_offset=signal_offset))
 
 
 def speedup_vs_single_node(task: str, metrics: Metrics, n_nodes: int = 8,
                            wpn: int = 4, scale: float = 1.0,
-                           cost: Optional[CostModel] = None) -> float:
+                           cost: Optional[CostModel] = None,
+                           n_keys: Optional[int] = None) -> float:
     cost = cost or default_cost()
-    wl = make_workload(task, n_nodes=n_nodes, wpn=wpn, scale=scale)
+    wl = make_workload(task, n_nodes=n_nodes, wpn=wpn, scale=scale,
+                       n_keys=n_keys)
     t1 = single_node_epoch_time(wl, cost)
     return t1 / max(metrics.epoch_time, 1e-12)
 

@@ -14,7 +14,11 @@ NODES = (2, 4, 8, 16)
 TASKS3 = ("KGE", "WV", "MF")
 
 
-def run(scale: float = 0.35, wpn: int = 4) -> List[str]:
+def run(scale: float = 0.35, wpn: int = 4, scale_keys: int = 0) -> List[str]:
+    """Paper node-scaling sweep.  With ``scale_keys`` > 0, an additional
+    engine-scale sweep runs the synthetic ZIPF task at that many keys across
+    the same node counts (the vectorized intent engine makes key counts far
+    beyond the per-key-dict seed feasible)."""
     rows: List[str] = []
     for task in TASKS3:
         for n in NODES:
@@ -26,6 +30,17 @@ def run(scale: float = 0.35, wpn: int = 4) -> List[str]:
                      round(sp, 2))
                 emit(rows, "fig7", variant, task, f"remote_frac_n{n}",
                      round(m.remote_fraction, 5))
+    if scale_keys:
+        for n in NODES:
+            for variant in ("adapm", "static_partitioning"):
+                m = run_one(variant, "ZIPF", n_nodes=n, wpn=wpn,
+                            scale=scale, n_keys=scale_keys)
+                sp = speedup_vs_single_node("ZIPF", m, n_nodes=n, wpn=wpn,
+                                            scale=scale, n_keys=scale_keys)
+                emit(rows, "fig7", variant, f"ZIPF{scale_keys}",
+                     f"speedup_n{n}", round(sp, 2))
+                emit(rows, "fig7", variant, f"ZIPF{scale_keys}",
+                     f"remote_frac_n{n}", round(m.remote_fraction, 5))
     return rows
 
 

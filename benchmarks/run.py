@@ -2,22 +2,38 @@
 
 One module per paper table/figure (DESIGN.md §8):
   fig6_overall          — Figure 6  (overall vs baselines, 5 tasks)
-  fig7_scalability      — Figure 7  (2..16 nodes)
+  fig7_scalability      — Figure 7  (2..16 nodes, + engine key-scale sweep)
   fig8_timing           — Figure 8  (adaptive action timing vs offsets)
   table2_communication  — Table 2   (communication + staleness)
   fig15_traces          — Figure 15 (per-key management traces)
   kernels_bench         — kernel micro-benches + TPU roofline bounds
+  scale_sweep           — key-count scaling of the vectorized intent engine
 
 Output: ``benchmark,variant,task,metric,value`` CSV rows on stdout and in
-``benchmarks/results/benchmarks.csv``.  The roofline deliverable is
-separate (``python -m benchmarks.roofline benchmarks/results/*.json``).
+``benchmarks/results/benchmarks.csv``.  ``--quick`` additionally writes
+``BENCH_quick.json`` (per-benchmark wall-clock + headline metric) at the
+repo root for the perf trajectory.  The roofline deliverable is separate
+(``python -m benchmarks.roofline benchmarks/results/*.json``).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import time
+
+_REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+
+# module-style aliases accepted by --only
+_ALIASES = {
+    "fig6_overall": "fig6",
+    "fig7_scalability": "fig7",
+    "fig8_timing": "fig8",
+    "table2_communication": "table2",
+    "fig15_traces": "fig15",
+    "kernels_bench": "kernels",
+}
 
 
 def main(argv=None):
@@ -29,13 +45,15 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from . import (fig6_overall, fig7_scalability, fig8_timing,
-                   fig15_traces, kernels_bench, quality_mf,
+                   fig15_traces, kernels_bench, quality_mf, scale_sweep,
                    table2_communication)
 
     scale = 0.2 if args.quick else 0.5
     benches = {
         "fig6": lambda: fig6_overall.run(scale=scale),
-        "fig7": lambda: fig7_scalability.run(scale=min(scale, 0.35)),
+        "fig7": lambda: fig7_scalability.run(
+            scale=min(scale, 0.35),
+            scale_keys=0 if args.quick else 100_000),
         # fig8 needs epochs >> offset for the immediate-action degradation
         # to be visible (replica lifetimes scale with the offset)
         "fig8": lambda: fig8_timing.run(scale=1.0),
@@ -43,23 +61,45 @@ def main(argv=None):
         "fig15": lambda: fig15_traces.run(scale=min(scale, 0.4)),
         "kernels": kernels_bench.run,
         "quality_mf": quality_mf.run,
+        "scale_sweep": lambda: scale_sweep.run(quick=args.quick),
     }
-    only = set(args.only.split(",")) if args.only else None
+    only = None
+    if args.only:
+        only = {_ALIASES.get(name, name) for name in args.only.split(",")}
+        unknown = only - set(benches)
+        if unknown:
+            ap.error(f"unknown benchmark(s): {sorted(unknown)}; "
+                     f"known: {sorted(benches) + sorted(_ALIASES)}")
 
     all_rows = ["benchmark,variant,task,metric,value"]
+    timings = {}
     for name, fn in benches.items():
         if only and name not in only:
             continue
         t0 = time.time()
         print(f"### {name} ###", flush=True)
-        all_rows += fn()
-        print(f"### {name} done in {time.time() - t0:.1f}s ###", flush=True)
+        rows = fn()
+        wall = time.time() - t0
+        all_rows += rows
+        timings[name] = {"wall_clock_s": round(wall, 2)}
+        if rows:
+            # headline metric: the benchmark's first emitted row
+            _bench, variant, task, metric, value = rows[0].split(",", 4)
+            timings[name]["headline"] = {
+                "variant": variant, "task": task, "metric": metric,
+                "value": value}
+        print(f"### {name} done in {wall:.1f}s ###", flush=True)
 
     os.makedirs("benchmarks/results", exist_ok=True)
     with open("benchmarks/results/benchmarks.csv", "w") as f:
         f.write("\n".join(all_rows) + "\n")
     print(f"wrote {len(all_rows) - 1} rows to "
           "benchmarks/results/benchmarks.csv")
+    if args.quick:
+        out = os.path.join(_REPO_ROOT, "BENCH_quick.json")
+        with open(out, "w") as f:
+            json.dump(timings, f, indent=1)
+        print(f"wrote {os.path.normpath(out)}")
 
 
 if __name__ == "__main__":

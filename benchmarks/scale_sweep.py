@@ -1,0 +1,70 @@
+"""Key-count scale sweep over the vectorized intent engine.
+
+Runs skewed Zipf streams (`data.workloads.zipf_workload`) at
+keys in {1e4, 1e5, 1e6} under AdaPM and static partitioning and records
+simulator wall-clock next to the simulated metrics — the per-key-dict seed
+could not finish the 1e6-key row at all.  Results are written to
+``BENCH_scale.json`` at the repo root so later PRs have a perf trajectory.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List
+
+from repro.core.simulator import SimConfig, simulate
+from repro.data.workloads import zipf_workload
+
+from .common import default_cost, emit, make_policy
+
+KEY_COUNTS = (10_000, 100_000, 1_000_000)
+VARIANTS = ("adapm", "static_partitioning")
+
+_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                    "BENCH_scale.json")
+
+
+def run(quick: bool = False, n_nodes: int = 4, wpn: int = 2,
+        n_batches: int = 100, batch_size: int = 64) -> List[str]:
+    rows: List[str] = []
+    results = []
+    key_counts = KEY_COUNTS[:2] if quick else KEY_COUNTS
+    for n_keys in key_counts:
+        t_wl = time.perf_counter()
+        wl = zipf_workload(n_nodes=n_nodes, wpn=wpn, n_batches=n_batches,
+                           n_keys=n_keys, batch_size=batch_size)
+        gen_s = time.perf_counter() - t_wl
+        for variant in VARIANTS:
+            cost = default_cost()
+            pol = make_policy(variant, n_nodes, cost, wl)
+            t0 = time.perf_counter()
+            m = simulate(pol, wl, SimConfig(signal_offset=100))
+            wall = time.perf_counter() - t0
+            emit(rows, "scale_sweep", variant, f"ZIPF{n_keys}",
+                 "sim_wall_clock_s", round(wall, 3))
+            emit(rows, "scale_sweep", variant, f"ZIPF{n_keys}",
+                 "epoch_time_s", round(m.epoch_time, 4))
+            emit(rows, "scale_sweep", variant, f"ZIPF{n_keys}",
+                 "remote_frac", round(m.remote_fraction, 5))
+            results.append({
+                "n_keys": n_keys,
+                "variant": pol.name,
+                "workload_gen_s": round(gen_s, 3),
+                "sim_wall_clock_s": round(wall, 3),
+                **m.as_dict(),
+            })
+    with open(_OUT, "w") as f:
+        json.dump({"n_nodes": n_nodes, "wpn": wpn, "n_batches": n_batches,
+                   "batch_size": batch_size, "results": results}, f, indent=1)
+    print(f"wrote {os.path.normpath(_OUT)}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="cap the sweep at 1e5 keys")
+    run(quick=ap.parse_args().quick)

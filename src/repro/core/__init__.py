@@ -1,3 +1,22 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Faithful AdaPM core: intent signaling, the unified vectorized intent
+engine, simulator-drivable policies, and the discrete-event cluster
+simulator.  The engine (`repro.core.engine`) is the single decision
+procedure — both the simulator policies and the SPMD planner
+(`repro.pm.planner`) route placement decisions through it (DESIGN.md §2).
+"""
+
+from .api import AccessResult, CostModel, Metrics, PMPolicy, RoundLedger
+from .engine import (IntentEngine, IntentStore, OwnerTable,
+                     concurrent_intent, decide_on_activate, home_nodes,
+                     intent_miss_bound)
+from .intent import Intent, IntentTable, IntentType, LogicalClock
+from .manager import AdaPM
+from .simulator import SimConfig, Workload, simulate
+
+__all__ = [
+    "AccessResult", "AdaPM", "CostModel", "Intent", "IntentEngine",
+    "IntentStore", "IntentTable", "IntentType", "LogicalClock", "Metrics",
+    "OwnerTable", "PMPolicy", "RoundLedger", "SimConfig", "Workload",
+    "concurrent_intent", "decide_on_activate", "home_nodes",
+    "intent_miss_bound", "simulate",
+]

@@ -10,7 +10,9 @@ per-round byte/message counters held by the policy's ``RoundLedger``.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from .intent import Intent
 
@@ -36,20 +38,37 @@ class CostModel:
     node_mem_bytes: float = 512e9       # per-node memory capacity
 
 
+def budget_prefix(costs: np.ndarray, budget: float
+                  ) -> Tuple[int, float, np.ndarray]:
+    """Batched compute-budget rule shared by every ``access_batch``: access
+    i runs iff the budget *before* it is positive (the final access may push
+    the budget negative; the simulator carries the deficit).  Returns
+    ``(n_processed, spent, exclusive_cumsum)`` — ``(0, 0.0, ...)`` when no
+    access fits or ``costs`` is empty."""
+    cum = np.cumsum(costs)
+    excl = cum - costs
+    n = int(np.count_nonzero(budget - excl > 0.0))
+    spent = float(cum[n - 1]) if n else 0.0
+    return n, spent, excl
+
+
 @dataclass
 class RoundLedger:
-    """Per-round traffic accumulator (reset by the simulator each round)."""
+    """Per-round traffic accumulator (reset by the simulator each round).
+
+    Holds numpy arrays so vectorized policies (the intent engine) can charge
+    whole batches at once with ``np.add.at``."""
 
     n_nodes: int
-    bytes_out: List[float] = field(default_factory=list)
-    msgs: List[int] = field(default_factory=list)
+    bytes_out: np.ndarray = field(default_factory=lambda: np.zeros(0))
+    msgs: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
 
     def __post_init__(self):
         self.reset()
 
     def reset(self):
-        self.bytes_out = [0.0] * self.n_nodes
-        self.msgs = [0] * self.n_nodes
+        self.bytes_out = np.zeros(self.n_nodes, np.float64)
+        self.msgs = np.zeros(self.n_nodes, np.int64)
 
     def charge(self, node: int, nbytes: float, nmsgs: int = 0):
         self.bytes_out[node] += nbytes
@@ -133,6 +152,27 @@ class PMPolicy:
         """One parameter access during batch processing.  Returns whether the
         access was local; charges remote traffic to the ledger otherwise."""
         raise NotImplementedError
+
+    def access_batch(self, node: int, worker: int, keys: Sequence[int],
+                     now: float, dur: float, budget: float
+                     ) -> Tuple[int, float]:
+        """Process ``keys`` (distinct, in order) during the compute phase of
+        the round ``[now, now + dur)`` until ``budget`` is exhausted; each
+        access costs ``t_local`` or ``t_remote`` depending on whether the
+        worker stalls.  Returns ``(n_processed, remaining_budget)`` — the
+        budget may go negative on the final access (carried by the
+        simulator).  The default implementation loops over ``access()``;
+        vectorized policies override it with batched accounting."""
+        n_done = 0
+        for k in keys:
+            if budget <= 0.0:
+                break
+            t_access = now + (dur - max(budget, 0.0))
+            res = self.access(node, worker, int(k), t_access)
+            budget -= (self.cost.t_remote if res.worker_stalled
+                       else self.cost.t_local)
+            n_done += 1
+        return n_done, budget
 
     # --- communication rounds ----------------------------------------------
     def run_round(self, now: float, round_duration_hint: float) -> None:

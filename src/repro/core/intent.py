@@ -15,8 +15,10 @@ States of an intent w.r.t. its worker's clock ``C`` (paper §3):
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Set, Tuple
+from dataclasses import dataclass
+from typing import Dict, Iterable, Sequence, Set, Tuple
+
+import numpy as np
 
 
 class IntentType(enum.Enum):
@@ -30,9 +32,10 @@ class IntentType(enum.Enum):
 @dataclass(frozen=True)
 class Intent:
     """One signaled intent: worker ``worker_id`` will access ``keys`` in
-    the clock window ``[c_start, c_end)`` of *its own* logical clock."""
+    the clock window ``[c_start, c_end)`` of *its own* logical clock.
+    ``keys`` may be any integer sequence (tuple or ndarray)."""
 
-    keys: Tuple[int, ...]
+    keys: Sequence[int]
     c_start: int
     c_end: int
     worker_id: int
@@ -66,13 +69,6 @@ class LogicalClock:
         return self.value
 
 
-@dataclass
-class _KeyIntents:
-    """Per-key bag of (c_start, c_end, worker_id) windows on one node."""
-
-    windows: List[Tuple[int, int, int]] = field(default_factory=list)
-
-
 class IntentTable:
     """Node-local store of signaled intents, indexed by key.
 
@@ -83,74 +79,40 @@ class IntentTable:
       * garbage-collect expired windows.
 
     Workers can signal overlapping/extending intents freely (§3); the table
-    simply stores all windows and reasons over the union.
+    simply stores all windows and reasons over the union.  Storage and the
+    activation queries are the vectorized `engine.IntentStore`; this class
+    is the per-`Intent` adapter.
     """
 
     def __init__(self):
-        self._by_key: Dict[int, _KeyIntents] = {}
+        from .engine import IntentStore
+        self._store = IntentStore()
 
     def signal(self, intent: Intent) -> None:
-        for k in intent.keys:
-            self._by_key.setdefault(k, _KeyIntents()).windows.append(
-                (intent.c_start, intent.c_end, intent.worker_id))
+        self._store.signal(np.asarray(intent.keys, np.int64),
+                           intent.c_start, intent.c_end, intent.worker_id)
 
     def keys_with_any_intent(self) -> Iterable[int]:
-        return self._by_key.keys()
+        return [int(k) for k in self._store.keys()]
 
     def has_active(self, key: int, clocks: Dict[int, int]) -> bool:
-        ki = self._by_key.get(key)
-        if ki is None:
-            return False
-        for (s, e, w) in ki.windows:
-            c = clocks.get(w, 0)
-            if s <= c < e:
-                return True
-        return False
+        return self._store.has_active(key, clocks)
 
     def active_workers(self, key: int, clocks: Dict[int, int]) -> Set[int]:
-        ki = self._by_key.get(key)
-        if ki is None:
-            return set()
-        out = set()
-        for (s, e, w) in ki.windows:
-            c = clocks.get(w, 0)
-            if s <= c < e:
-                out.add(w)
-        return out
+        return self._store.active_workers(key, clocks)
 
     def earliest_future_start(self, key: int, clocks: Dict[int, int]):
         """Earliest c_start among *inactive* windows for ``key`` together
         with its worker, or ``None`` if no inactive intent exists."""
-        ki = self._by_key.get(key)
-        if ki is None:
-            return None
-        best = None
-        for (s, e, w) in ki.windows:
-            c = clocks.get(w, 0)
-            if c < s:  # inactive
-                if best is None or s < best[0]:
-                    best = (s, w)
-        return best
+        return self._store.earliest_future_start(key, clocks)
 
     def last_end(self, key: int) -> int:
         """Max c_end over all windows (used for expiry bookkeeping)."""
-        ki = self._by_key.get(key)
-        if ki is None:
-            return 0
-        return max(e for (_, e, _) in ki.windows)
+        return self._store.last_end(key)
 
     def gc(self, clocks: Dict[int, int]) -> None:
         """Drop expired windows; drop keys with no windows left."""
-        dead = []
-        for k, ki in self._by_key.items():
-            ki.windows = [
-                (s, e, w) for (s, e, w) in ki.windows
-                if clocks.get(w, 0) < e
-            ]
-            if not ki.windows:
-                dead.append(k)
-        for k in dead:
-            del self._by_key[k]
+        self._store.gc(clocks)
 
     def __len__(self) -> int:
-        return len(self._by_key)
+        return len(self._store)

@@ -1,22 +1,23 @@
 """The AdaPM parameter manager (paper §4, §B), as a simulator-drivable policy.
 
-Faithful mechanisms:
+All mechanism lives in the vectorized `core.engine.IntentEngine` — intent
+tables, Algorithm 1 action timing, the §4.1 owner-side decision rule,
+ownership/location caches, and versioned replica delta sync.  This module is
+the thin policy shell that adapts the engine to the `PMPolicy` interface and
+keeps the seed's public surface (``dir``, ``_repl``, ``trace``) so tests and
+benchmarks keep working.  Behavior is pinned to the seed dict-and-heap
+implementation by `tests/test_engine.py`.
+
+Faithful mechanisms (see `engine.py` for the implementation):
   * per-worker logical clocks and intent tables (§3);
-  * Algorithm 1 adaptive action timing on the *signaling* node: inactive
-    intents are held locally and announced (as "active") to the owner only
-    when the Poisson soft upper bound says the worker may reach the start
-    clock within the next two rounds (§4.2, §B.2.1 aggregated intent);
+  * Algorithm 1 adaptive action timing on the signaling node (§4.2, §B.2.1);
   * owner-side decision rule (§4.1): exactly-one active node and no replicas
     -> relocate; concurrent active intent -> selective replicas exactly while
     intent is active; relocation never happens while replicas exist (§B.2.4);
-  * responsibility follows allocation: the owner decides and is the replica
-    sync hub; ownership (and decision state) moves on relocation (§B.1);
-  * versioned delta replica sync, batched per round in grouped
-    request/response messages (§B.1.2, §B.2.2);
-  * home-node fallback routing with location caches (§B.2.3) — stale caches
-    cost forwarding hops, charged per message;
-  * intent is optional: un-signaled accesses fall back to synchronous remote
-    access (§4 "Optional intent").
+  * responsibility follows allocation (§B.1); versioned delta replica sync,
+    batched per round (§B.1.2, §B.2.2); home-node fallback routing with
+    location caches (§B.2.3); intent is optional — un-signaled accesses fall
+    back to synchronous remote access (§4).
 
 Ablation variants (paper §5.5, §5.8): ``relocation=False`` (replication
 only), ``replication=False`` (relocation only), ``immediate_action=True``
@@ -25,25 +26,49 @@ only), ``replication=False`` (relocation only), ``immediate_action=True``
 
 from __future__ import annotations
 
-import heapq
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Optional, Sequence, Set, Tuple
 
-from .api import AccessResult, CostModel, PMPolicy
+import numpy as np
+
+from .api import AccessResult, CostModel, PMPolicy, budget_prefix
+from .engine import IntentEngine
 from .intent import Intent
-from .ownership import OwnershipDirectory, home_node
-from .timing import ActionTimer
 
 
-@dataclass
-class _ReplicaState:
-    """Owner-side view of one replicated key."""
+class _ReplicaView:
+    """Read-only stand-in for the seed's per-key ``_ReplicaState``."""
 
-    holders: Set[int] = field(default_factory=set)
-    version: int = 0
-    # per-holder: (version last synced to holder, sim time of last sync)
-    holder_sync: Dict[int, Tuple[int, float]] = field(default_factory=dict)
-    dirty_nodes: Set[int] = field(default_factory=set)  # wrote since last round
+    __slots__ = ("_engine", "_key")
+
+    def __init__(self, engine: IntentEngine, key: int):
+        self._engine = engine
+        self._key = key
+
+    @property
+    def holders(self) -> Set[int]:
+        return self._engine.holders(self._key)
+
+    @property
+    def version(self) -> int:
+        if self._key >= self._engine.capacity:
+            return 0
+        return int(self._engine.version[self._key])
+
+
+class _ReplMap:
+    """Dict-like view of the engine's replica bitmasks (seed ``_repl``)."""
+
+    def __init__(self, engine: IntentEngine):
+        self._engine = engine
+
+    def __contains__(self, key: int) -> bool:
+        return bool(self._engine.holders(key))
+
+    def __getitem__(self, key: int) -> _ReplicaView:
+        return _ReplicaView(self._engine, key)
+
+    def get(self, key: int, default=None):
+        return self[key] if key in self else default
 
 
 class AdaPM(PMPolicy):
@@ -64,244 +89,75 @@ class AdaPM(PMPolicy):
             self.name = "AdaPM w/o replication"
         if immediate_action:
             self.name = "AdaPM immediate action"
-        self.dir = OwnershipDirectory(n_nodes)
-        self.timers = [ActionTimer(alpha=alpha, p=p, lam0=lam0)
-                       for _ in range(n_nodes)]
-        self.clocks: List[Dict[int, int]] = [dict() for _ in range(n_nodes)]
-        # node-local pending (inactive, not yet announced) intents:
-        # heap of (c_start, key, worker, c_end)
-        self._pending: List[List[Tuple[int, int, int, int]]] = [
-            [] for _ in range(n_nodes)]
-        # node-local announced keys -> list of (worker, c_end) windows
-        self._announced: List[Dict[int, List[Tuple[int, int]]]] = [
-            dict() for _ in range(n_nodes)]
-        # owner-side: which nodes announced active intent per key
-        self._active: Dict[int, Set[int]] = {}
-        self._repl: Dict[int, _ReplicaState] = {}
-        # per-node owned-key count for memory accounting (keys start at home)
-        self._owned_extra: List[int] = [0] * n_nodes  # relocated-in minus out
-        self._n_keys_hint = 0
-        self.trace_keys = trace_keys or set()
-        self.trace: List[Tuple[float, int, int, str]] = []  # (t, key, node, ev)
+        self.engine = IntentEngine(
+            n_nodes, cost, self.ledger, self.metrics,
+            relocation=relocation, replication=replication,
+            immediate=immediate_action, alpha=alpha, p=p, lam0=lam0,
+            trace_keys=trace_keys)
+        self.dir = self.engine.owners
 
-    # ------------------------------------------------------------------ util
-    def _is_local(self, node: int, key: int) -> bool:
-        if self.dir.owner_of(key) == node:
-            return True
-        st = self._repl.get(key)
-        return st is not None and node in st.holders
+    # ------------------------------------------------------- compat views
+    @property
+    def trace(self):
+        return self.engine.trace
 
-    def _trace(self, now: float, key: int, node: int, ev: str):
-        if key in self.trace_keys:
-            self.trace.append((now, key, node, ev))
+    @property
+    def _repl(self) -> _ReplMap:
+        return _ReplMap(self.engine)
+
+    @property
+    def _n_keys_hint(self) -> int:
+        return self.engine.n_keys_hint
+
+    @_n_keys_hint.setter
+    def _n_keys_hint(self, n: int) -> None:
+        self.engine.n_keys_hint = n
+        self.engine.ensure_capacity(n)
 
     # ------------------------------------------------------------ sim hooks
     def signal_intent(self, node: int, intent: Intent, now: float) -> None:
-        pend = self._pending[node]
-        for k in intent.keys:
-            heapq.heappush(
-                pend, (intent.c_start, k, intent.worker_id, intent.c_end))
+        self.engine.signal(node, np.asarray(intent.keys, np.int64),
+                           intent.c_start, intent.c_end, intent.worker_id)
 
     def advance_clock(self, node: int, worker: int, clock: int) -> None:
-        self.clocks[node][worker] = clock
+        self.engine.advance_clock(node, worker, clock)
 
     def access(self, node: int, worker: int, key: int,
                now: float, write: bool = True) -> AccessResult:
         self.metrics.n_accesses += 1
-        owner = self.dir.owner_of(key)
-        if owner == node:
+        e = self.engine
+        e.ensure_capacity(key + 1)
+        if e.owners.owner[key] == node:
             return AccessResult(local=True, staleness=0.0)
-        st = self._repl.get(key)
-        if st is not None and node in st.holders:
-            if write:
-                st.dirty_nodes.add(node)
-                st.version += 1
-            _, t_sync = st.holder_sync.get(node, (0, now))
-            stale = max(0.0, now - t_sync)
-            self.metrics.staleness_sum += stale
-            self.metrics.n_replica_reads += 1
+        if int(e.holder_mask[key]) >> node & 1:
+            stale = max(0.0, now - float(e.sync_time[node, key]))
+            e.replica_reads(node, np.array([key], np.int64),
+                            np.array([now]), write)
             return AccessResult(local=True, staleness=stale)
-        # synchronous remote access (no intent was acted on): round trip to
-        # the owner, routed via location cache / home node.
-        hops = self.dir.route(node, key)
-        nbytes = 2 * self.cost.value_bytes + hops * 64
-        self.metrics.n_remote += 1
-        self.ledger.charge(node, nbytes, nmsgs=1 + hops)
+        e.remote_accesses(node, np.array([key], np.int64))
         return AccessResult(local=False)
 
-    # -------------------------------------------------------------- rounds
+    def access_batch(self, node: int, worker: int, keys: Sequence[int],
+                     now: float, dur: float, budget: float
+                     ) -> Tuple[int, float]:
+        keys = np.asarray(keys, np.int64)
+        own, held = self.engine.classify(node, keys)
+        local = own | held
+        costs = np.where(local, self.cost.t_local, self.cost.t_remote)
+        n, spent, excl = budget_prefix(costs, budget)
+        keys, own, held = keys[:n], own[:n], held[:n]
+        self.metrics.n_accesses += n
+        rr = ~own & held
+        if np.any(rr):
+            times = now + (dur - budget) + excl[:n]
+            self.engine.replica_reads(node, keys[rr], times[rr], True)
+        rem = ~own & ~held
+        if np.any(rem):
+            self.engine.remote_accesses(node, keys[rem])
+        return n, budget - spent
+
     def run_round(self, now: float, round_duration_hint: float) -> None:
-        c = self.cost
-        # 1) per-worker rate estimates (Algorithm 1 lines 1-6)
-        for node in range(self.n_nodes):
-            for w, clk in self.clocks[node].items():
-                self.timers[node].observe_round(w, clk)
+        self.engine.step(now)
 
-        # 2) node-local: decide which pending intents to announce (Alg. 1),
-        #    and which announced intents expired (§B.2.1 aggregated intent).
-        for node in range(self.n_nodes):
-            pend = self._pending[node]
-            ann = self._announced[node]
-            clocks = self.clocks[node]
-            newly: List[Tuple[int, int, int]] = []  # (key, worker, c_end)
-            # Scan all pending intents whose start clock is below the most
-            # optimistic horizon on this node; re-stash the ones whose own
-            # worker's Algorithm-1 bound says a later round still suffices.
-            if self.immediate:
-                scan_bound = float("inf")
-            else:
-                scan_bound = max(
-                    (clocks.get(w, 0) + self.timers[node].horizon(w)
-                     for w in clocks), default=self.timers[node].horizon(0))
-            stash: List[Tuple[int, int, int, int]] = []
-            while pend and pend[0][0] < scan_bound:
-                c_start, k, w, c_end = heapq.heappop(pend)
-                clk = clocks.get(w, 0)
-                if c_end <= clk:
-                    continue                     # expired before ever acted on
-                act = self.immediate or self.timers[node].should_act(
-                    w, clk, c_start)
-                if act:
-                    newly.append((k, w, c_end))
-                else:
-                    stash.append((c_start, k, w, c_end))
-            for item in stash:
-                heapq.heappush(pend, item)
-            # expirations: all windows of an announced key expired
-            expired: List[int] = []
-            for k, windows in ann.items():
-                windows[:] = [(w, e) for (w, e) in windows
-                              if clocks.get(w, 0) < e]
-                if not windows:
-                    expired.append(k)
-            # 3) send grouped messages to owners & process owner decisions
-            dests: Set[int] = set()
-            for k, w, c_end in newly:
-                first = k not in ann
-                ann.setdefault(k, []).append((w, c_end))
-                if first:
-                    owner = self.dir.owner_of(k)
-                    if owner != node:
-                        hops = self.dir.route(node, k)
-                        self.ledger.charge(node, c.signal_bytes * hops)
-                        dests.add(owner)
-                    self._owner_on_activate(k, node, now)
-                else:
-                    pass  # extension of an already-announced intent: no msg
-            for k in expired:
-                del ann[k]
-                owner = self.dir.owner_of(k)
-                if owner != node:
-                    hops = self.dir.route(node, k)
-                    self.ledger.charge(node, c.signal_bytes * hops)
-                    dests.add(owner)
-                self._owner_on_expire(k, node, now)
-            # grouped request/response message overhead (§B.2.2):
-            # one request + one response per peer communicated with
-            self.ledger.charge(node, 0.0, nmsgs=2 * len(dests))
-
-        # 4) replica synchronization via the owner hub (§B.1.2): versioned
-        #    deltas, batched; upstream pushes then downstream fan-out.
-        for k, st in list(self._repl.items()):
-            if not st.holders:
-                del self._repl[k]
-                continue
-            owner = self.dir.owner_of(k)
-            for h in st.dirty_nodes:
-                if h == owner:
-                    continue
-                self.ledger.charge(h, c.value_bytes, nmsgs=0)
-            st.dirty_nodes.clear()
-            for h in st.holders:
-                ver, _t = st.holder_sync.get(h, (-1, now))
-                if ver < st.version:
-                    self.ledger.charge(owner, c.value_bytes, nmsgs=0)
-                    st.holder_sync[h] = (st.version, now)
-        self.metrics.rounds += 1
-
-    # ------------------------------------------------------ owner decisions
-    def _owner_on_activate(self, key: int, node: int, now: float) -> None:
-        """§4.1 decision, executed at the owner when ``node`` announces
-        active intent for ``key``."""
-        c = self.cost
-        active = self._active.setdefault(key, set())
-        active.add(node)
-        owner = self.dir.owner_of(key)
-        if node == owner:
-            self._trace(now, key, node, "own-local")
-            return
-        st = self._repl.get(key)
-        has_replicas = st is not None and len(st.holders) > 0
-        others_active = [n for n in active if n != node]
-        if (self.relocation and not has_replicas
-                and len(others_active) == 0):
-            # exactly one node with active intent -> relocate (§4.1, §B.2.4)
-            self._relocate(key, owner, node, now)
-        elif self.replication:
-            # concurrent intent -> replica exactly where needed (§4.1)
-            self._create_replica(key, owner, node, now)
-        # replication disabled & multiple active: non-owners fall back to
-        # synchronous remote access (charged in access()).
-
-    def _owner_on_expire(self, key: int, node: int, now: float) -> None:
-        active = self._active.get(key)
-        if active is None:
-            return
-        active.discard(node)
-        st = self._repl.get(key)
-        if st is not None and node in st.holders:
-            # destroy replica when the holder's intent expires (§4.1)
-            st.holders.discard(node)
-            st.holder_sync.pop(node, None)
-            st.dirty_nodes.discard(node)
-            self._trace(now, key, node, "replica-destroy")
-        owner = self.dir.owner_of(key)
-        if not active:
-            self._active.pop(key, None)
-            return
-        if self.relocation and len(active) == 1:
-            (m,) = tuple(active)
-            has_replicas = st is not None and len(st.holders) > 0
-            if m != owner and (not has_replicas or
-                               (st is not None and st.holders == {m})):
-                # single remaining active node -> relocate to it (Fig. 4d/11)
-                self._relocate(key, owner, m, now)
-
-    def _relocate(self, key: int, src: int, dst: int, now: float) -> None:
-        c = self.cost
-        st = self._repl.get(key)
-        if st is not None and dst in st.holders:
-            # dst already holds the value: transfer ownership + fresh delta
-            st.holders.discard(dst)
-            st.holder_sync.pop(dst, None)
-            nbytes = c.value_bytes  # delta + ownership/intent state
-        else:
-            nbytes = c.value_bytes + 64
-        self.ledger.charge(src, nbytes)  # grouped (§B.2.2)
-        self.dir.relocate(key, dst)
-        self._owned_extra[src] -= 1
-        self._owned_extra[dst] += 1
-        self.metrics.n_relocations += 1
-        self._trace(now, key, dst, "relocate-in")
-        if st is not None and st.holders:
-            # remaining holders now sync against the new owner; location
-            # updates piggyback on the next sync round (§B.2.3).
-            pass
-
-    def _create_replica(self, key: int, owner: int, node: int,
-                        now: float) -> None:
-        c = self.cost
-        st = self._repl.setdefault(key, _ReplicaState())
-        if node in st.holders:
-            return
-        st.holders.add(node)
-        st.holder_sync[node] = (st.version, now)
-        self.ledger.charge(owner, c.value_bytes)  # grouped (§B.2.2)
-        self.metrics.n_replica_creates += 1
-        self._trace(now, key, node, "replica-create")
-
-    # ------------------------------------------------------------- memory
     def mem_bytes(self, node: int) -> float:
-        n_repl = sum(1 for st in self._repl.values() if node in st.holders)
-        base = self._n_keys_hint / self.n_nodes
-        return (base + self._owned_extra[node] + n_repl) * self.cost.value_bytes
+        return self.engine.mem_bytes(node)

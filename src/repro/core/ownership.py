@@ -2,76 +2,61 @@
 
 Every key has a statically assigned *home node* (hash partitioning) that is
 the routing fallback: it always knows the current *owner* (the node holding
-the primary copy).  Management responsibility follows allocation: the owner
-decides relocate-vs-replicate and is the replica-sync hub; responsibility
-moves with the parameter on relocation.
+the primary copy).  Nodes route messages with *location caches* (last known
+owner); a message routed to a stale owner is forwarded to the current owner
+via the home node (extra hop), exactly as in Lapse.
 
-Nodes route messages with *location caches* (last known owner).  Caches are
-never invalidated explicitly; a message routed to a stale owner is forwarded
-to the current owner via the home node (extra hop), exactly as in Lapse.
-The simulator charges those forwarding hops.
-"""
+The state itself lives in vectorized arrays in `core.engine.OwnerTable`;
+this module keeps the seed's scalar `OwnershipDirectory` API as a thin
+adapter over it for tests and per-key callers."""
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List
+import numpy as np
+
+from .engine import OwnerTable, home_nodes  # noqa: F401  (re-exported)
+
+_FIB = 11400714819323198485
 
 
 def home_node(key: int, n_nodes: int) -> int:
-    """Static hash partitioning of keys to home nodes."""
-    # Fibonacci hashing — cheap, well-spread for dense integer key ranges.
-    return ((key * 11400714819323198485) >> 32) % n_nodes
+    """Static hash partitioning of keys to home nodes (Fibonacci hashing —
+    cheap, well-spread for dense integer key ranges).  The vectorized
+    `engine.home_nodes` matches this exactly."""
+    return ((key * _FIB) >> 32) % n_nodes
 
 
-@dataclass
 class OwnershipDirectory:
-    """Global ownership state, as distributedly known.
+    """Global ownership state, as distributedly known — scalar adapter over
+    `engine.OwnerTable`.
 
-    ``owner[k]`` is ground truth (the home node always tracks it — location
-    updates are piggybacked on sync messages).  ``caches[n][k]`` is node n's
-    last known owner.  ``route(n, k)`` returns the number of hops a message
-    from node n to key k's owner takes (1 = direct, 2 = via stale cache or
-    home forward), charging the realistic cost of the Lapse-style protocol.
+    The owner array is ground truth (the home node always tracks it —
+    location updates are piggybacked on sync messages); per-node caches hold
+    each node's last known owner.  ``route(n, k)`` returns the number of
+    hops a message from node n to key k's owner takes (1 = direct, 2/3 = via
+    stale cache or home forward), charging the realistic cost of the
+    Lapse-style protocol.
     """
 
-    n_nodes: int
-    owner: Dict[int, int] = field(default_factory=dict)
-    caches: List[Dict[int, int]] = None  # type: ignore[assignment]
-
-    def __post_init__(self):
-        if self.caches is None:
-            self.caches = [dict() for _ in range(self.n_nodes)]
+    def __init__(self, n_nodes: int):
+        self.n_nodes = n_nodes
+        self.table = OwnerTable(n_nodes)
 
     def owner_of(self, key: int) -> int:
-        o = self.owner.get(key)
-        if o is None:
-            o = home_node(key, self.n_nodes)
-            self.owner[key] = o
-        return o
+        return self.table.owner_of(key)
 
     def route(self, src: int, key: int, update_cache: bool = True) -> int:
-        """Hops for a message src -> current owner of ``key``.
-
-        Direct if the location cache (or home-node identity) is correct;
-        otherwise the stale target forwards via the home node (2 hops total
-        beyond the first send -> 2 or 3 messages).  Returns message count.
-        """
-        true_owner = self.owner_of(key)
-        if src == true_owner:
-            return 0
-        believed = self.caches[src].get(key, home_node(key, self.n_nodes))
-        hops = 1
-        if believed != true_owner:
-            # stale: believed node (or home) forwards to the current owner
-            hops += 1 if believed == home_node(key, self.n_nodes) else 2
-        if update_cache:
-            # responses carry the owner's identity -> cache refresh
-            self.caches[src][key] = true_owner
-        return hops
+        """Hops for a message src -> current owner of ``key``: direct if the
+        location cache (or home-node identity) is correct; otherwise the
+        stale target forwards via the home node.  Responses carry the
+        owner's identity, refreshing the cache."""
+        self.table.ensure_capacity(key + 1)
+        return int(self.table.route_batch(
+            src, np.array([key], np.int64), update_cache)[0])
 
     def relocate(self, key: int, new_owner: int) -> None:
         """Transfer ownership.  The old owner informs the home node
         (piggybacked); caches of other nodes go stale silently."""
-        self.owner[key] = new_owner
-        self.caches[new_owner][key] = new_owner
+        self.table.ensure_capacity(key + 1)
+        self.table.relocate_batch(np.array([key], np.int64),
+                                  np.array([new_owner], np.int64))

@@ -106,9 +106,8 @@ def simulate(policy: PMPolicy, workload: Workload, cfg: SimConfig) -> Metrics:
             b = st.loader_next
             policy.signal_intent(
                 node,
-                Intent(keys=tuple(int(k) for k in stream[b]),
-                       c_start=b, c_end=b + cfg.intent_window,
-                       worker_id=gid),
+                Intent(keys=stream[b], c_start=b,
+                       c_end=b + cfg.intent_window, worker_id=gid),
                 now)
             st.loader_next += 1
 
@@ -124,15 +123,16 @@ def simulate(policy: PMPolicy, workload: Workload, cfg: SimConfig) -> Metrics:
     rounds = 0
     while unfinished > 0 and rounds < cfg.max_rounds:
         # collect last round's traffic (sync + ad-hoc remote accesses)
-        metrics.total_bytes += sum(policy.ledger.bytes_out)
+        metrics.total_bytes += float(np.sum(policy.ledger.bytes_out))
         policy.ledger.reset()
         policy.run_round(now, prev_dur)
         comm = max(
-            policy.ledger.bytes_out[n] / cost.bandwidth
-            + policy.ledger.msgs[n] * cost.per_msg
+            float(policy.ledger.bytes_out[n]) / cost.bandwidth
+            + int(policy.ledger.msgs[n]) * cost.per_msg
             for n in range(n_nodes))
         dur = max(cost.base_round, comm)
-        # compute phase: every worker gets `dur` seconds
+        # compute phase: every worker gets `dur` seconds; accesses are
+        # accounted batch-at-a-time through `PMPolicy.access_batch`
         for node in range(n_nodes):
             for w in range(wpn):
                 gid = _worker_gid(node, w, wpn)
@@ -143,15 +143,11 @@ def simulate(policy: PMPolicy, workload: Workload, cfg: SimConfig) -> Metrics:
                 budget = dur + st.carry
                 while budget > 0.0 and st.batch_idx < len(stream):
                     batch = stream[st.batch_idx]
-                    n_keys = len(batch)
-                    while st.key_idx < n_keys and budget > 0.0:
-                        t_access = now + (dur - max(budget, 0.0))
-                        res = policy.access(
-                            node, gid, int(batch[st.key_idx]), t_access)
-                        budget -= (cost.t_remote if res.worker_stalled
-                                   else cost.t_local)
-                        st.key_idx += 1
-                    if st.key_idx >= n_keys and budget > 0.0:
+                    if st.key_idx < len(batch):
+                        n_done, budget = policy.access_batch(
+                            node, gid, batch[st.key_idx:], now, dur, budget)
+                        st.key_idx += n_done
+                    if st.key_idx >= len(batch) and budget > 0.0:
                         budget -= cost.t_batch
                         st.key_idx = 0
                         st.batch_idx += 1
@@ -167,7 +163,7 @@ def simulate(policy: PMPolicy, workload: Workload, cfg: SimConfig) -> Metrics:
         if rounds % cfg.track_mem_every == 0:
             peak = max(policy.mem_bytes(n) for n in range(n_nodes))
             metrics.peak_mem_bytes = max(metrics.peak_mem_bytes, peak)
-    metrics.total_bytes += sum(policy.ledger.bytes_out)
+    metrics.total_bytes += float(np.sum(policy.ledger.bytes_out))
     metrics.epoch_time = now
     metrics.bytes_per_node = metrics.total_bytes / n_nodes
     return metrics

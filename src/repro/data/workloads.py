@@ -129,22 +129,53 @@ def gnn_workload(n_nodes=8, wpn=4, n_batches=150, n_keys=160_000,
                     _streams_from_sampler(rng, n_nodes, wpn, n_batches, sample))
 
 
+def zipf_workload(n_nodes=4, wpn=2, n_batches=100, n_keys=1_000_000,
+                  batch_size=64, zipf_a=1.1, seed=5) -> Workload:
+    """Pure skewed Zipf stream at arbitrary key counts (scale sweeps).
+
+    Sampling goes through the inverse CDF (``searchsorted``) instead of
+    ``rng.choice(p=...)``, which is O(n_keys) per draw — at 10^6+ keys the
+    naive sampler dominates the whole simulation."""
+    rng = np.random.default_rng(seed)
+    cdf = np.cumsum(_zipf_probs(n_keys, zipf_a))
+    perm = rng.permutation(n_keys)  # hot keys spread over the id space
+
+    def sample(rng, node, w, b):
+        r = np.minimum(np.searchsorted(cdf, rng.random(batch_size),
+                                       side="right"), n_keys - 1)
+        return np.unique(perm[r])
+
+    return Workload(f"ZIPF(n={n_keys})", n_keys,
+                    _streams_from_sampler(rng, n_nodes, wpn, n_batches,
+                                          sample))
+
+
 TASKS = {
     "KGE": kge_workload,
     "WV": wv_workload,
     "MF": mf_workload,
     "CTR": ctr_workload,
     "GNN": gnn_workload,
+    "ZIPF": zipf_workload,
 }
 
 
 def make_workload(task: str, n_nodes: int = 8, wpn: int = 4,
-                  scale: float = 1.0, seed: Optional[int] = None) -> Workload:
-    """Build one of the five paper tasks, optionally scaling batch counts."""
+                  scale: float = 1.0, seed: Optional[int] = None,
+                  n_keys: Optional[int] = None) -> Workload:
+    """Build one of the paper tasks (plus the synthetic ZIPF scale task),
+    optionally scaling batch counts and overriding the key-space size."""
     fn = TASKS[task]
     kwargs = {"n_nodes": n_nodes, "wpn": wpn}
     if seed is not None:
         kwargs["seed"] = seed
+    if n_keys is not None:
+        if task == "MF":
+            n_rows = int(n_keys * 0.8)
+            kwargs["n_rows"] = n_rows
+            kwargs["n_cols"] = n_keys - n_rows
+        else:
+            kwargs["n_keys"] = n_keys
     wl = fn(**kwargs)
     if scale != 1.0:
         for node_streams in wl.streams:

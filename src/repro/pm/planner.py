@@ -2,11 +2,15 @@
 into placement plans for the intent-managed embedding (DESIGN.md §3b).
 
 This is where the faithful AdaPM logic (repro.core) plugs into the SPMD
-runtime.  The planner treats each *data shard* as a node:
+runtime.  The planner treats each *data shard* as a node and routes its
+placement decisions through the shared intent engine
+(`repro.core.engine`) — the same §4.1 decision procedure the simulator
+policies use:
 
   * rows with active intent on >= 2 shards in the planning window are
     *replicated* -> placed in the device replica cache (AdaPM §4.1:
-    concurrent intent -> selective replication);
+    concurrent intent -> selective replication), weighted by the summed
+    shard count (`engine.concurrent_intent`);
   * rows with single-shard intent stay owner-sharded (the relocation arm
     degenerates under SPMD: ownership is affine in the row id, so
     "relocate" means "serve via the compact miss path", which moves the
@@ -16,18 +20,19 @@ runtime.  The planner treats each *data shard* as a node:
     must cover, i.e. when to act on the loader's intent signals.
 
 Because intent is exact, the planner also knows the exact per-step
-cache-miss count and sizes the compact miss buffer (bucketed powers of two)
-— static shapes for XLA out of dynamic workload knowledge.
+cache-miss count (`engine.intent_miss_bound`) and sizes the compact miss
+buffer (bucketed powers of two) — static shapes for XLA out of dynamic
+workload knowledge.
 """
 
 from __future__ import annotations
 
-from collections import Counter, deque
 from dataclasses import dataclass
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core.engine import concurrent_intent, intent_miss_bound
 from repro.core.timing import ActionTimer
 
 
@@ -58,7 +63,8 @@ class IntentPlanner:
         self.n_shards = n_shards
         self.plan_every = plan_every
         self.timer = ActionTimer(alpha=alpha, p=p, lam0=lam0)
-        # step -> list over shards of id arrays (intent signals)
+        # step -> list over shards of id arrays (the intent signal buffer;
+        # decisions over it are made by the engine classifiers)
         self._intents: Dict[int, List[np.ndarray]] = {}
         self._version = 0
         self._last_planned_step = -1
@@ -81,49 +87,49 @@ class IntentPlanner:
         """How far ahead a plan must cover (Alg. 1 soft upper bound)."""
         return max(self.plan_every, self.timer.horizon(0))
 
+    def _window_signals(self, lo: int, hi: int):
+        """Flatten the signal buffer over ``[lo, hi)`` into parallel
+        (keys, shards, steps) arrays for the engine classifiers."""
+        keys, shards, steps = [], [], []
+        for s in range(lo, hi):
+            per_shard = self._intents.get(s)
+            if per_shard is None:
+                continue
+            for sh, ids in enumerate(per_shard):
+                if ids is None or len(ids) == 0:
+                    continue
+                keys.append(ids)
+                shards.append(np.full(len(ids), sh, np.int64))
+                steps.append(np.full(len(ids), s, np.int64))
+        if not keys:
+            z = np.zeros(0, np.int64)
+            return z, z, z
+        return (np.concatenate(keys), np.concatenate(shards),
+                np.concatenate(steps))
+
     def plan(self, current_step: int) -> PlacementPlan:
         """Build the plan for [current_step, current_step + lookahead)."""
-        window = range(current_step, current_step + self.lookahead())
-        multi: Counter = Counter()
-        single: Counter = Counter()
-        known_steps = []
-        for s in window:
-            shards = self._intents.get(s)
-            if shards is None:
-                continue
-            known_steps.append(s)
-            per_key_shards: Dict[int, int] = {}
-            for sh, ids in enumerate(shards):
-                if ids is None:
-                    continue
-                for k in np.unique(ids):
-                    per_key_shards[k] = per_key_shards.get(k, 0) + 1
-            for k, cnt in per_key_shards.items():
-                if cnt >= 2:
-                    multi[k] += cnt      # concurrent intent -> replicate
-                else:
-                    single[k] += 1
-        hot = [int(k) for k, _ in multi.most_common(self.C)]
+        end = current_step + self.lookahead()
+        keys, shards, steps = self._window_signals(current_step, end)
+        # §4.1 via the engine: concurrent intent -> replicate (weighted),
+        # single-shard intent -> owner path
+        uniq, weight, _single = concurrent_intent(keys, shards, steps)
+        multi = uniq[weight > 0]
+        order = np.argsort(-weight[weight > 0], kind="stable")
+        hot = multi[order][: self.C].astype(np.int64)
         cache_ids = np.full((self.C,), self.V, dtype=np.int32)
-        if hot:
-            cache_ids[: len(hot)] = np.asarray(hot, dtype=np.int32)
+        if len(hot):
+            cache_ids[: len(hot)] = hot.astype(np.int32)
         cache_ids = np.sort(cache_ids)
 
-        # exact per-step miss counts over the window -> capacity bucket
-        hot_set = set(int(h) for h in hot)
-        worst_miss = 1
-        for s in known_steps:
-            for ids in self._intents.get(s, []):
-                if ids is None:
-                    continue
-                miss = sum(1 for k in ids if int(k) not in hot_set)
-                worst_miss = max(worst_miss, miss)
+        # exact per-(step, shard) miss counts over the window -> capacity
+        worst_miss = max(1, intent_miss_bound(keys, shards, steps, hot))
         self._version += 1
         return PlacementPlan(
             version=self._version,
             cache_ids=cache_ids,
             miss_capacity=_bucket(worst_miss),
-            window=(current_step, current_step + self.lookahead()),
+            window=(current_step, end),
         )
 
     def should_replan(self, current_step: int,

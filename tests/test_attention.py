@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.models.layers import decode_attention, flash_attention
 from repro.models.ssm import _chunked_linear_scan

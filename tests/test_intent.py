@@ -1,7 +1,7 @@
 """Tests for intent signaling primitives (paper §3)."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.intent import Intent, IntentTable, IntentType, LogicalClock
 from repro.core.ownership import OwnershipDirectory, home_node

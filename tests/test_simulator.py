@@ -3,7 +3,7 @@ baselines, checking the paper's qualitative claims at test scale."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.api import CostModel
 from repro.core.baselines import (NuPSStatic, SelectiveReplicationSSP,
