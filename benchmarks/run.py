@@ -59,7 +59,7 @@ def main(argv=None):
         "fig8": lambda: fig8_timing.run(scale=1.0),
         "table2": lambda: table2_communication.run(scale=scale),
         "fig15": lambda: fig15_traces.run(scale=min(scale, 0.4)),
-        "kernels": kernels_bench.run,
+        "kernels": lambda: kernels_bench.run(quick=args.quick),
         "quality_mf": quality_mf.run,
         "scale_sweep": lambda: scale_sweep.run(quick=args.quick),
     }

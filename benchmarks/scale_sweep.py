@@ -55,10 +55,14 @@ def run(quick: bool = False, n_nodes: int = 4, wpn: int = 2,
                 "sim_wall_clock_s": round(wall, 3),
                 **m.as_dict(),
             })
-    with open(_OUT, "w") as f:
-        json.dump({"n_nodes": n_nodes, "wpn": wpn, "n_batches": n_batches,
-                   "batch_size": batch_size, "results": results}, f, indent=1)
-    print(f"wrote {os.path.normpath(_OUT)}")
+    if not quick:
+        # --quick caps the sweep at 1e5 keys; writing that subset would
+        # clobber the 1e6-key rows the perf trajectory tracks
+        with open(_OUT, "w") as f:
+            json.dump({"n_nodes": n_nodes, "wpn": wpn,
+                       "n_batches": n_batches, "batch_size": batch_size,
+                       "results": results}, f, indent=1)
+        print(f"wrote {os.path.normpath(_OUT)}")
     return rows
 
 

@@ -323,18 +323,34 @@ def concurrent_intent(keys: np.ndarray, nodes: np.ndarray,
 
 
 def intent_miss_bound(keys: np.ndarray, nodes: np.ndarray,
-                      clocks: np.ndarray, cached: np.ndarray) -> int:
-    """Exact worst per-(clock, node) cache-miss count over a window — the
-    planner's static miss-buffer bound out of dynamic intent knowledge."""
+                      clocks: np.ndarray, cached: np.ndarray, *,
+                      per_node: bool = True) -> int:
+    """Exact worst cache-miss count over a window — the planner's static
+    miss-buffer bound out of dynamic intent knowledge.
+
+    ``per_node=True`` (simulator semantics) counts per (clock, node): each
+    node serves its own misses.  ``per_node=False`` counts *unique* missed
+    keys per clock across all nodes — the bound for a lookup that
+    deduplicates misses over the whole step's batch (the SPMD managed
+    embedding compacts one buffer per step, so a key missed by several
+    shards occupies one slot)."""
     keys = np.asarray(keys, np.int64)
     if len(keys) == 0:
         return 0
     miss = ~np.isin(keys, cached)
     if not np.any(miss):
         return 0
-    group = np.asarray(clocks, np.int64) * (np.int64(np.max(nodes)) + 1) \
-        + np.asarray(nodes, np.int64)
-    _, cnt = np.unique(group[miss], return_counts=True)
+    clocks = np.asarray(clocks, np.int64)
+    if per_node:
+        group = clocks * (np.int64(np.max(nodes)) + 1) \
+            + np.asarray(nodes, np.int64)
+        _, cnt = np.unique(group[miss], return_counts=True)
+        return int(cnt.max())
+    # unique (clock, key) pairs, then the worst per-clock unique count
+    pair = clocks[miss] * (np.int64(np.max(keys)) + 1) + keys[miss]
+    uniq_pair = np.unique(pair)
+    _, cnt = np.unique(uniq_pair // (np.int64(np.max(keys)) + 1),
+                       return_counts=True)
     return int(cnt.max())
 
 

@@ -63,10 +63,17 @@ class IntentSignalingLoader:
         batch["tokens"] = jnp.asarray(toks)
         batch["labels"] = jnp.asarray(labels)
         if self.planner is not None:
+            # every row must be signaled: the last shard takes the
+            # B % n_shards remainder (dropping it broke the planner's
+            # exact miss bound for the trailing rows — ISSUE 2)
             shard_size = max(1, self.B // self.n_shards)
             for shard in range(self.n_shards):
-                ids = np.unique(
-                    toks[shard * shard_size:(shard + 1) * shard_size])
+                lo = shard * shard_size
+                hi = (shard + 1) * shard_size \
+                    if shard < self.n_shards - 1 else self.B
+                if lo >= self.B:
+                    break
+                ids = np.unique(toks[lo:hi])
                 self.planner.signal(step, shard, ids)
         return batch
 

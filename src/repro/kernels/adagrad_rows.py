@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .blocking import pick_block_d
+
 
 def _make_kernel(lr: float, eps: float):
     def kernel(ids_ref, table_ref, accum_ref, grad_ref,
@@ -54,8 +56,7 @@ def adagrad_row_update(table: jnp.ndarray, accum: jnp.ndarray,
     """
     n = ids.shape[0]
     V, D = table.shape
-    block_d = min(block_d, D)
-    assert D % block_d == 0, (D, block_d)
+    block_d = pick_block_d(D, block_d)
     grid = (n, D // block_d)
 
     def row_tile(i, j, ids_ref):

@@ -1,0 +1,15 @@
+"""Shared tile-size selection for the row-blocked kernels."""
+
+from __future__ import annotations
+
+
+def pick_block_d(d: int, block_d: int) -> int:
+    """Largest divisor of ``d`` that is <= ``block_d``: the row kernels
+    tile the feature dim in (1, block_d) blocks, so the tile must divide D
+    exactly (e.g. D=576 with the default 512 cap -> 288).  Multiples of
+    128 (the VREG lane width) are preferred automatically whenever D
+    itself is lane-aligned; trace-time only, so the linear scan is free."""
+    b = max(1, min(block_d, d))
+    while d % b:
+        b -= 1
+    return b

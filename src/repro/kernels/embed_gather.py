@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .blocking import pick_block_d
+
 
 def _gather_kernel(ids_ref, table_ref, out_ref):
     # The index_map already routed the right table row-tile into VMEM.
@@ -34,8 +36,7 @@ def embed_gather(table: jnp.ndarray, ids: jnp.ndarray, *,
     """
     n = ids.shape[0]
     V, D = table.shape
-    block_d = min(block_d, D)
-    assert D % block_d == 0, (D, block_d)
+    block_d = pick_block_d(D, block_d)
     grid = (n, D // block_d)
 
     return pl.pallas_call(

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from . import ref
 from .adagrad_rows import adagrad_row_update as _adagrad_pallas
 from .embed_gather import embed_gather as _gather_pallas
+from .pm_forward import pm_combine as _combine_pallas
+from .scatter_rows import scatter_rows as _scatter_pallas
 
 
 def _on_tpu() -> bool:
@@ -40,25 +42,63 @@ def adagrad_row_update(table, accum, ids, grads, *, lr=0.1, eps=1e-8,
                            interpret=not _on_tpu())
 
 
+def pm_combine(hit, cache_slot, buf_slot, cache_rows, buf_rows, *,
+               use_pallas: bool = True):
+    """Managed-lookup select kernel: hits read the replica cache, misses
+    read the compact deduped buffer (trash row last)."""
+    if not use_pallas:
+        return ref.pm_combine_ref(hit, cache_slot, buf_slot, cache_rows,
+                                  buf_rows)
+    return _combine_pallas(hit, cache_slot, buf_slot, cache_rows, buf_rows,
+                           interpret=not _on_tpu())
+
+
+def scatter_rows(base, ids, rows, *, use_pallas: bool = True):
+    """Blocked row scatter (managed-lookup backward); ids must be unique
+    apart from zero-row pad collisions."""
+    if not use_pallas:
+        return ref.scatter_rows_ref(base, ids, rows)
+    return _scatter_pallas(base, ids, rows, interpret=not _on_tpu())
+
+
+def _sorted_slots(ids, n_slots: int):
+    """Shared id-compaction: sort, flag first-of-group, cumsum to dense
+    slot indices (clipped into n_slots).  Returns (order, s_ids, slot)."""
+    ids = ids.astype(jnp.int32)
+    order = jnp.argsort(ids)
+    s_ids = ids[order]
+    is_new = jnp.concatenate(
+        [jnp.ones((1,), jnp.int32),
+         (s_ids[1:] != s_ids[:-1]).astype(jnp.int32)])
+    slot = jnp.minimum(jnp.cumsum(is_new) - 1, n_slots - 1)
+    return order, s_ids, slot
+
+
 @functools.partial(jax.jit, static_argnames=("n_slots",))
-def segment_rows(ids, grads, n_slots: int):
+def segment_rows(ids, grads, n_slots: int, pad_id=0):
     """Aggregate duplicate row ids: returns (slot_ids (n_slots,), summed
-    grads (n_slots, D)).  Unused slots get id 0 with an all-zero gradient
-    (a zero AdaGrad update is NOT a no-op — accum would stay, value moves
-    by 0/sqrt(acc) = 0 — so zero rows are safe).
+    grads (n_slots, D)).  Unused slots get id ``pad_id`` (default 0) with an
+    all-zero gradient (a zero AdaGrad update is NOT a no-op — accum would
+    stay, value moves by 0/sqrt(acc) = 0 — so zero rows are safe); a
+    sentinel ``pad_id`` (e.g. the vocab size) lets scatter callers route pad
+    slots to a trash row instead.
 
     Static-shape friendly: n_slots >= number of distinct ids expected.
     """
-    ids = ids.astype(jnp.int32)
-    sorted_idx = jnp.argsort(ids)
-    s_ids = ids[sorted_idx]
-    s_g = grads[sorted_idx]
-    is_new = jnp.concatenate(
-        [jnp.ones((1,), jnp.int32), (s_ids[1:] != s_ids[:-1]).astype(jnp.int32)])
-    slot = jnp.cumsum(is_new) - 1                     # segment index
-    slot = jnp.minimum(slot, n_slots - 1)
+    order, s_ids, slot = _sorted_slots(ids, n_slots)
+    s_g = grads[order]
     out_g = jnp.zeros((n_slots, grads.shape[1]), dtype=jnp.float32)
     out_g = out_g.at[slot].add(s_g.astype(jnp.float32))
-    out_ids = jnp.zeros((n_slots,), dtype=jnp.int32)
+    # slots >= the unique count are never scattered to: they keep pad_id
+    out_ids = jnp.full((n_slots,), jnp.int32(pad_id))
     out_ids = out_ids.at[slot].set(s_ids)
     return out_ids, out_g
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots",))
+def unique_rows(ids, n_slots: int, pad_id=0):
+    """Unique ids compacted into ``n_slots`` slots (unused slots keep
+    ``pad_id``) — the id-only fast path of `segment_rows` for callers that
+    already hold aggregated gradients (e.g. a dense autodiff grad)."""
+    _, s_ids, slot = _sorted_slots(ids, n_slots)
+    return jnp.full((n_slots,), jnp.int32(pad_id)).at[slot].set(s_ids)

@@ -1,0 +1,125 @@
+"""Pallas TPU kernels: the fused intent-managed embedding forward path.
+
+The managed lookup (DESIGN.md §3c) is a three-stage pipeline:
+
+  probe   : binary-search every token against the sorted replica-cache ids;
+  compact : deduplicate the missed ids and compact them into the planner's
+            intent-sized buffer of M slots (per *unique* id — this is what
+            makes `engine.intent_miss_bound` an exact bound);
+  gather  : move the row data — the M unique missed rows come out of the
+            owner-sharded table through the blocked `embed_gather` kernel,
+            and the per-token select between cache row and miss-buffer row
+            is the `pm_combine` kernel below.
+
+The probe/compact stage is pure int32 index arithmetic over (T,) vectors —
+it runs on the scalar path and its outputs feed the kernels' scalar-prefetch
+operands (`PrefetchScalarGridSpec`), exactly the pattern `embed_gather`
+uses: indices live in SMEM, index_maps route the right (1, block_d) row
+tiles of HBM-resident sources into VMEM.  The row data-path — the part that
+is bandwidth-bound — never touches a dense (T, D) table gather: hits read
+the replicated cache, misses read the compact (M+1, D) buffer (on TPU the
+buffer is what the masked partial-sum all-reduce moves; slot M is the
+all-zeros overflow/trash row).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .blocking import pick_block_d
+
+# any real token id is a vocab row index < 2**31 - 1
+_SENTINEL = jnp.int32(2 ** 31 - 1)
+
+
+class ProbeCompact(NamedTuple):
+    """Index-stage outputs of the managed lookup (all static shapes)."""
+
+    hit: jnp.ndarray         # (T,) bool, token served by the replica cache
+    cache_slot: jnp.ndarray  # (T,) int32 cache row (clipped; valid on hit)
+    buf_ids: jnp.ndarray     # (M,) int32 UNIQUE missed ids (pad: 0)
+    buf_slot: jnp.ndarray    # (T,) int32 buffer slot per token (M = trash)
+    n_miss: jnp.ndarray      # () int32 count of unique missed ids
+    overflow: jnp.ndarray    # (T,) bool, unique misses beyond capacity M
+
+
+def probe_and_compact(cache_ids: jnp.ndarray, tok: jnp.ndarray,
+                      miss_capacity: int) -> ProbeCompact:
+    """Probe (T,) tokens against the sorted cache and compact the *unique*
+    missed ids into ``miss_capacity`` buffer slots.
+
+    Deduplication is load-bearing: the planner's `intent_miss_bound` counts
+    unique ids per step, so duplicate missed tokens must share one slot for
+    the static capacity to be exact (each duplicate consuming its own slot
+    silently overflowed the bound; see ISSUE 2)."""
+    M = miss_capacity
+    T = tok.shape[0]
+    slot = jnp.searchsorted(cache_ids, tok)
+    slot = jnp.clip(slot, 0, cache_ids.shape[0] - 1).astype(jnp.int32)
+    hit = cache_ids[slot] == tok
+
+    # sort the missed ids to the front (sentinel sorts hits to the back);
+    # first-of-group flags give each unique missed id one dense slot
+    miss_tok = jnp.where(hit, _SENTINEL, tok)
+    order = jnp.argsort(miss_tok)            # stable
+    s = miss_tok[order]
+    valid = s != _SENTINEL
+    first = valid & jnp.concatenate(
+        [jnp.ones((1,), bool), s[1:] != s[:-1]])
+    grp = jnp.cumsum(first.astype(jnp.int32)) - 1   # unique index per token
+    n_miss = jnp.sum(first.astype(jnp.int32))
+
+    in_buf = first & (grp < M)
+    buf_ids = jnp.zeros((M + 1,), jnp.int32).at[
+        jnp.where(in_buf, grp, M)].set(jnp.where(in_buf, s, 0))[:M]
+    slot_sorted = jnp.where(valid & (grp < M), grp, M).astype(jnp.int32)
+    buf_slot = jnp.zeros((T,), jnp.int32).at[order].set(slot_sorted)
+    over_sorted = valid & (grp >= M)
+    overflow = jnp.zeros((T,), bool).at[order].set(over_sorted)
+    return ProbeCompact(hit, slot, buf_ids, buf_slot, n_miss, overflow)
+
+
+def _combine_kernel(hit_ref, slot_ref, pos_ref, cache_ref, buf_ref, out_ref):
+    # index_maps already staged the token's cache row tile and miss-buffer
+    # row tile into VMEM; the scalar hit flag picks the winner.
+    i = pl.program_id(0)
+    out_ref[...] = jnp.where(hit_ref[i] != 0, cache_ref[...], buf_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def pm_combine(hit: jnp.ndarray, cache_slot: jnp.ndarray,
+               buf_slot: jnp.ndarray, cache_rows: jnp.ndarray,
+               buf_rows: jnp.ndarray, *, block_d: int = 512,
+               interpret: bool = True) -> jnp.ndarray:
+    """Per-token select: out[i] = cache_rows[cache_slot[i]] on hit else
+    buf_rows[buf_slot[i]].  cache_rows (C, D); buf_rows (M+1, D) with the
+    trash row last; returns (T, D)."""
+    T = hit.shape[0]
+    D = cache_rows.shape[1]
+    block_d = pick_block_d(D, block_d)
+    grid = (T, D // block_d)
+
+    return pl.pallas_call(
+        _combine_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_d),
+                             lambda i, j, h, s, p: (s[i], j)),   # cache
+                pl.BlockSpec((1, block_d),
+                             lambda i, j, h, s, p: (p[i], j)),   # buffer
+            ],
+            out_specs=pl.BlockSpec((1, block_d),
+                                   lambda i, j, h, s, p: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((T, D), cache_rows.dtype),
+        interpret=interpret,
+    )(hit.astype(jnp.int32), cache_slot.astype(jnp.int32),
+      buf_slot.astype(jnp.int32), cache_rows, buf_rows)

@@ -22,6 +22,18 @@ def adagrad_row_update_ref(table, accum, ids, grads, *, lr=0.1, eps=1e-8):
     return new_table, new_accum
 
 
+def pm_combine_ref(hit, cache_slot, buf_slot, cache_rows, buf_rows):
+    """Per-token select between cache row and compact miss-buffer row."""
+    hit_rows = jnp.take(cache_rows, cache_slot.astype(jnp.int32), axis=0)
+    miss_rows = jnp.take(buf_rows, buf_slot.astype(jnp.int32), axis=0)
+    return jnp.where(hit[:, None], hit_rows, miss_rows)
+
+
+def scatter_rows_ref(base, ids, rows):
+    """Row scatter of unique ids (pad collisions must carry equal rows)."""
+    return base.at[ids.astype(jnp.int32)].set(rows.astype(base.dtype))
+
+
 def segment_rows_ref(ids, grads, n_unique: int):
     """Aggregate duplicate row gradients: returns (unique_ids padded with
     table-size sentinel handled by caller, summed grads) — reference for

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: row-wise scatter of compact gradient rows into the
+owner-sharded table gradient.
+
+Backward of the managed lookup: duplicate token gradients are pre-summed
+(`ops.segment_rows`, one compact (n, D) buffer), then this kernel writes
+each aggregated row into its table slot — a scalar-prefetched blocked
+scatter with input/output aliasing, so the dense (V, D) gradient is the
+donated zero buffer and only the touched row tiles ever move through VMEM.
+
+Rows ids must be unique; pad slots point at a caller-provided trash row
+(the managed path uses row V of a (V+1, D) buffer, sliced off afterwards),
+so colliding pad writes are harmless last-wins zeros.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .blocking import pick_block_d
+
+
+def _scatter_kernel(ids_ref, base_ref, rows_ref, out_ref):
+    # index_map routed out tile (ids[i], j); pure blocked row write.
+    out_ref[...] = rows_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def scatter_rows(base: jnp.ndarray, ids: jnp.ndarray, rows: jnp.ndarray, *,
+                 block_d: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """out = base with out[ids[i]] = rows[i]; base (R, D) is donated
+    (in-place on TPU), ids (n,) int32 unique row indices, rows (n, D)."""
+    n = ids.shape[0]
+    R, D = base.shape
+    block_d = pick_block_d(D, block_d)
+    grid = (n, D // block_d)
+
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_d),
+                             lambda i, j, ids_ref: (ids_ref[i], j)),  # base
+                pl.BlockSpec((1, block_d),
+                             lambda i, j, ids_ref: (i, j)),           # rows
+            ],
+            out_specs=pl.BlockSpec((1, block_d),
+                                   lambda i, j, ids_ref: (ids_ref[i], j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((R, D), base.dtype),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(ids.astype(jnp.int32), base, rows.astype(base.dtype))

@@ -27,23 +27,35 @@ def main(argv=None):
                     default="adagrad")
     ap.add_argument("--no-pm", dest="pm", action="store_false",
                     help="disable intent-managed embeddings")
+    ap.add_argument("--kernel", action="store_true",
+                    help="Pallas-backed managed hot path (native on TPU)")
     ap.add_argument("--cache-capacity", type=int, default=256)
     ap.add_argument("--shards", type=int, default=4,
                     help="logical data shards for intent aggregation")
+    ap.add_argument("--refresh-every", type=int, default=1,
+                    help="replica sync cadence in steps (0: replans only)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--init-from", default=None,
+                    help="checkpoint to restore from: a step_* directory "
+                         "or a --ckpt-dir root (newest step is used)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     lc = LoopConfig(steps=args.steps, batch=args.batch, seq=args.seq,
                     lr=args.lr, optimizer=args.optimizer, pm=args.pm,
+                    kernel=args.kernel,
                     cache_capacity=args.cache_capacity,
-                    n_shards=args.shards, ckpt_dir=args.ckpt_dir,
-                    ckpt_every=args.ckpt_every)
+                    n_shards=args.shards,
+                    refresh_every=args.refresh_every,
+                    ckpt_dir=args.ckpt_dir,
+                    ckpt_every=args.ckpt_every, init_from=args.init_from)
     res = train_loop(cfg, lc)
     print(f"done: {len(res.losses)} steps, final loss "
           f"{res.losses[-1]:.4f}, {res.plans} placement plans, "
-          f"{res.recompiles} compiled buckets, {res.wall_s:.1f}s wall")
+          f"{res.refreshes} replica refreshes, {res.overflows} overflow "
+          f"fallbacks, {res.recompiles} compiled buckets, "
+          f"{res.wall_s:.1f}s wall")
 
 
 if __name__ == "__main__":

@@ -7,11 +7,16 @@ multi-shard intent — AdaPM's selective replication).  Lookups take two
 paths:
 
   hit  : the row is in the replica cache -> pure local read, no collective;
-  miss : the row is only on its owner shard -> the miss tokens are
-         compacted into a fixed-capacity buffer (capacity M is *known in
-         advance from intent*, bucketed to keep shapes static) and served
+  miss : the row is only on its owner shard -> the *unique* missed ids are
+         deduplicated and compacted into a fixed-capacity buffer (capacity
+         M is *known in advance from intent* — the planner's per-unique-id
+         `intent_miss_bound` — bucketed to keep shapes static) and served
          by one masked-partial-sum all-reduce over (M, D) instead of the
          dense (B*S, D) all-reduce of plain vocab-parallel embedding.
+
+``kernel=True`` runs the row data-path through the Pallas kernels
+(DESIGN.md §3c): blocked miss-buffer gather + scalar-prefetched per-token
+combine forward, compact row scatter backward.
 
 Replica synchronization: gradients NEVER flow into the cache (replicas are
 not independent parameters).  A custom VJP routes all row gradients to the
@@ -28,6 +33,9 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.pm_forward import probe_and_compact
 
 
 class EmbedPMState(NamedTuple):
@@ -56,83 +64,82 @@ def refresh_cache(state: EmbedPMState,
     return make_state(state.table, ids)
 
 
-def _cache_probe(cache_ids, tokens_flat):
-    """(slot, hit) per token via binary search over the sorted cache ids."""
-    slot = jnp.searchsorted(cache_ids, tokens_flat)
-    slot = jnp.clip(slot, 0, cache_ids.shape[0] - 1)
-    hit = cache_ids[slot] == tokens_flat
-    return slot, hit
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
 def pm_lookup(table, cache_ids, cache_rows, tokens, miss_capacity: int,
-              strict: bool = False):
+              strict: bool = False, kernel: bool = False):
     """Intent-managed embedding lookup.
 
     table (V, D); cache_ids (C,) sorted; cache_rows (C, D); tokens (B, S).
     ``miss_capacity``: static bound on cache-miss tokens per call — the
-    planner derives it exactly from intent and picks a bucket; overflow
-    misses are transparently correct (they fall back to a second pass
-    guarded by a predicate) but cost an extra dense lookup, so the planner
-    sizing them away is the perf story, not a correctness requirement.
+    planner derives it exactly from intent (per *unique* id; misses are
+    deduplicated before compaction to keep that bound exact) and picks a
+    bucket; overflow misses are transparently correct (they fall back to a
+    second pass guarded by a predicate) but cost an extra dense lookup, so
+    the planner sizing them away is the perf story, not a correctness
+    requirement.  ``kernel=True`` routes the row data-path through the
+    Pallas kernels (`repro.kernels`: blocked miss-buffer gather + per-token
+    combine forward, blocked row scatter backward); the default jnp path is
+    the bitwise reference.
     """
     out, _ = _pm_lookup_fwd(table, cache_ids, cache_rows, tokens,
-                            miss_capacity, strict)
+                            miss_capacity, strict, kernel)
     return out
 
 
 def _lookup_impl(table, cache_ids, cache_rows, tokens, miss_capacity,
-                 strict=False):
+                 strict=False, kernel=False):
     B, S = tokens.shape
     T = B * S
     M = min(miss_capacity, T)
+    D = table.shape[1]
     tok = tokens.reshape(T).astype(jnp.int32)
-    slot, hit = _cache_probe(cache_ids, tok)
-    hit_rows = jnp.take(cache_rows, slot, axis=0)
+    # probe + dedup/compact: UNIQUE missed ids fill the M intent-planned
+    # slots (duplicates share a slot, matching `intent_miss_bound`)
+    pc = probe_and_compact(cache_ids, tok, M)
 
-    # compact the misses into M slots (intent-planned capacity)
-    miss = ~hit
-    pos = jnp.cumsum(miss.astype(jnp.int32)) - 1          # position per miss
-    in_buf = miss & (pos < M)
-    buf_slot = jnp.where(in_buf, pos, M)                  # overflow -> trash
-    buf_ids = jnp.zeros((M + 1,), jnp.int32).at[buf_slot].set(tok)[:M]
-    # one compact lookup (on TPU: masked partial + all-reduce over (M, D))
-    buf_rows = jnp.take(table, buf_ids, axis=0)           # (M, D)
-    miss_rows = jnp.concatenate(
-        [buf_rows, jnp.zeros((1,) + buf_rows.shape[1:], buf_rows.dtype)])[
-        buf_slot]
-    # rare overflow: correctness fallback via a direct (dense) gather
-    n_miss = jnp.sum(miss.astype(jnp.int32))
-    overflow = miss & (pos >= M)
+    # blocked gather of the compact miss buffer (on TPU: the (M+1, D)
+    # buffer is what the masked partial-sum all-reduce moves) + per-token
+    # combine — Pallas kernels when ``kernel``, their jnp oracles otherwise
+    buf_rows = ops.embed_gather(table, pc.buf_ids, use_pallas=kernel)
+    buffer = jnp.concatenate(
+        [buf_rows, jnp.zeros((1, D), buf_rows.dtype)])        # trash row M
+    out = ops.pm_combine(pc.hit, pc.cache_slot, pc.buf_slot,
+                         cache_rows, buffer, use_pallas=kernel)
 
-    def with_overflow(mr):
+    def with_overflow(o):
         dense = jnp.take(table, tok, axis=0)
-        return jnp.where(overflow[:, None], dense, mr)
+        return jnp.where(pc.overflow[:, None], dense, o)
 
     if not strict:
         # rare overflow: correctness fallback via a direct (dense) gather.
         # ``strict=True`` (dry-run / planner-guaranteed capacity) omits the
         # branch entirely so no conditional dense collective is lowered.
-        miss_rows = jax.lax.cond(n_miss > M, with_overflow,
-                                 lambda mr: mr, miss_rows)
-    out = jnp.where(hit[:, None], hit_rows, miss_rows)
-    return out.reshape(B, S, table.shape[1])
+        out = jax.lax.cond(pc.n_miss > M, with_overflow, lambda o: o, out)
+    return out.reshape(B, S, D)
 
 
 def _pm_lookup_fwd(table, cache_ids, cache_rows, tokens, miss_capacity,
-                   strict=False):
+                   strict=False, kernel=False):
     out = _lookup_impl(table, cache_ids, cache_rows, tokens, miss_capacity,
-                       strict)
+                       strict, kernel)
     return out, (tokens, table.shape)
 
 
-def _pm_lookup_bwd(miss_capacity, strict, res, g):
+def _pm_lookup_bwd(miss_capacity, strict, kernel, res, g):
     tokens, (V, D) = res
     B, S = tokens.shape
     tok = tokens.reshape(B * S).astype(jnp.int32)
     gt = g.reshape(B * S, D)
     # replica write-back: ALL row gradients go to the owner-sharded table
-    grad_table = jnp.zeros((V, D), dtype=gt.dtype).at[tok].add(gt)
+    if kernel:
+        # pre-sum duplicates into compact slots (pad -> trash row V), then
+        # one blocked scatter into the donated zero gradient buffer
+        slot_ids, slot_g = ops.segment_rows(tok, gt, n_slots=B * S,
+                                            pad_id=V)
+        base = jnp.zeros((V + 1, D), dtype=gt.dtype)
+        grad_table = ops.scatter_rows(base, slot_ids, slot_g)[:V]
+    else:
+        grad_table = jnp.zeros((V, D), dtype=gt.dtype).at[tok].add(gt)
     return (grad_table, None, None, None)
 
 

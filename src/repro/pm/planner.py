@@ -77,6 +77,15 @@ class IntentPlanner:
             step, [None] * self.n_shards)  # type: ignore[list-item]
         per_shard[shard] = np.asarray(ids, dtype=np.int64)
 
+    def signaled_ids(self, step: int) -> Optional[np.ndarray]:
+        """Union of ids signaled for ``step`` (host-side; None if the
+        signals were never received or already collected)."""
+        per_shard = self._intents.get(step)
+        if per_shard is None:
+            return None
+        ids = [i for i in per_shard if i is not None and len(i)]
+        return np.unique(np.concatenate(ids)) if ids else None
+
     def observe_round(self, step: int) -> None:
         """One planning round passed; the training step counter is the
         worker clock (Algorithm 1 rate estimation)."""
@@ -84,8 +93,12 @@ class IntentPlanner:
 
     # ------------------------------------------------------------- plans
     def lookahead(self) -> int:
-        """How far ahead a plan must cover (Alg. 1 soft upper bound)."""
-        return max(self.plan_every, self.timer.horizon(0))
+        """How far ahead a plan must cover: one planning period *plus* the
+        Alg. 1 soft upper bound on clock advance.  Covering only the
+        horizon would make `should_replan` true one step after every plan
+        (window_end = step + horizon moves in lockstep with the replan
+        threshold), degenerating into a replan-every-round loop."""
+        return self.plan_every + self.timer.horizon(0)
 
     def _window_signals(self, lo: int, hi: int):
         """Flatten the signal buffer over ``[lo, hi)`` into parallel
@@ -110,6 +123,12 @@ class IntentPlanner:
     def plan(self, current_step: int) -> PlacementPlan:
         """Build the plan for [current_step, current_step + lookahead)."""
         end = current_step + self.lookahead()
+        # only plan over steps with signals in hand: a window running past
+        # the loader's prefetch horizon would under-count misses for the
+        # signal-less tail (the bound must stay exact)
+        if self._intents:
+            end = max(current_step + 1,
+                      min(end, max(self._intents) + 1))
         keys, shards, steps = self._window_signals(current_step, end)
         # §4.1 via the engine: concurrent intent -> replicate (weighted),
         # single-shard intent -> owner path
@@ -122,9 +141,13 @@ class IntentPlanner:
             cache_ids[: len(hot)] = hot.astype(np.int32)
         cache_ids = np.sort(cache_ids)
 
-        # exact per-(step, shard) miss counts over the window -> capacity
-        worst_miss = max(1, intent_miss_bound(keys, shards, steps, hot))
+        # exact per-step unique-miss counts over the window -> capacity
+        # (per_node=False: the managed lookup dedups misses over the whole
+        # step's batch, so unique ids per step is the exact bound)
+        worst_miss = max(1, intent_miss_bound(keys, shards, steps, hot,
+                                              per_node=False))
         self._version += 1
+        self._last_planned_step = current_step
         return PlacementPlan(
             version=self._version,
             cache_ids=cache_ids,
@@ -136,9 +159,17 @@ class IntentPlanner:
                       active: Optional[PlacementPlan]) -> bool:
         """Act-on-intent decision: replan when the Alg.-1 horizon says the
         worker may run past the active plan's window before the *next*
-        planning round completes."""
+        planning round completes.  Planning rounds come at most every
+        ``plan_every`` steps (the plan's window cannot outrun the loader's
+        signal horizon, so without this floor the horizon test degenerates
+        into replanning — and re-gathering the replica cache — every
+        step); an exhausted window forces a replan regardless."""
         if active is None:
             return True
+        if current_step >= active.window[1]:
+            return True
+        if current_step - self._last_planned_step < self.plan_every:
+            return False
         horizon = self.timer.horizon(0)
         return active.window[1] < current_step + horizon
 

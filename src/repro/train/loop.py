@@ -6,15 +6,23 @@ Per step:
   2. the planner (Algorithm 1 timing) decides whether to act: emit a new
      placement plan (replica-cache contents + miss-buffer capacity);
   3. the replica cache is synchronized from the owner-sharded table (one
-     grouped gather per round — AdaPM's batched replica sync);
-  4. the train step runs with the managed embedding path.
+     grouped gather per *refresh round* — AdaPM's batched replica sync:
+     on replan rounds, plus every ``refresh_every`` steps; in between,
+     replicas serve reads at most one refresh round stale);
+  4. the train step runs with the managed embedding path (optionally the
+     Pallas-kernel-backed one, ``LoopConfig.kernel``).
 
 Miss-capacity buckets map to distinct compiled executables; the bucket
 ladder is small (powers of two) so recompiles amortize away.
+
+``LoopResult.overflows`` counts steps whose actual unique-miss count
+exceeded the plan's capacity (forcing the lookup's dense fallback); with
+exact intent this stays 0 — the planner's bound is exact.
 """
 
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -40,12 +48,16 @@ class LoopConfig:
     lr: float = 0.01
     optimizer: str = "adagrad"
     pm: bool = True                  # intent-managed embedding on/off
+    kernel: bool = False             # Pallas-backed managed hot path
     cache_capacity: int = 256
     n_shards: int = 1
     prefetch: int = 16
     plan_every: int = 8
+    refresh_every: int = 1           # replica sync cadence (steps); replan
+    #                                  rounds always refresh
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 0
+    init_from: Optional[str] = None  # checkpoint dir to restore from
     log_every: int = 10
     seed: int = 0
 
@@ -54,7 +66,10 @@ class LoopConfig:
 class LoopResult:
     losses: List[float] = field(default_factory=list)
     plans: int = 0
+    refreshes: int = 0               # replica-cache sync rounds
+    overflows: int = 0               # steps with unique misses > capacity
     recompiles: int = 0
+    start_step: int = 0              # first step index (restored runs)
     wall_s: float = 0.0
 
 
@@ -63,6 +78,22 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig) -> LoopResult:
     key = jax.random.PRNGKey(lc.seed)
     params = init_model(cfg, key)
     opt_state = make_opt_init(lc.optimizer)(params)
+
+    res = LoopResult()
+    if lc.init_from:
+        # accept either a step_XXXXXXX directory or a checkpoint root
+        # (resolved to its newest step)
+        path = lc.init_from
+        if not os.path.exists(os.path.join(path, "manifest.json")):
+            latest = checkpoint.latest_step(path)
+            if latest is None:
+                raise FileNotFoundError(
+                    f"no checkpoint under {path!r} (expected a manifest or "
+                    f"step_* subdirectories)")
+            path = latest
+        restored, res.start_step = checkpoint.load(
+            path, {"params": params, "opt": opt_state})
+        params, opt_state = restored["params"], restored["opt"]
 
     planner = IntentPlanner(cfg.vocab_size, lc.cache_capacity,
                             n_shards=max(1, lc.n_shards),
@@ -77,28 +108,47 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig) -> LoopResult:
         if miss_capacity not in step_fns:
             step_fns[miss_capacity] = jax.jit(make_train_step(
                 cfg, optimizer=lc.optimizer, lr=lc.lr,
-                pm_miss_capacity=miss_capacity))
+                pm_miss_capacity=miss_capacity, pm_kernel=lc.kernel))
         return step_fns[miss_capacity]
 
-    res = LoopResult()
     plan: Optional[PlacementPlan] = None
     cache_ids = None
+    cache_rows = None
 
     for step, batch in loader:
         if step >= lc.steps:
             break
         if planner is not None:
             planner.observe_round(step)
+            replanned = False
             if planner.should_replan(step, plan):
                 plan = planner.plan(step)
                 cache_ids = jnp.asarray(plan.cache_ids)
                 res.plans += 1
+                replanned = True
                 planner.gc(step)
-            # replica sync round: re-gather hot rows from the live table
-            state = make_state(params["embed"], cache_ids)
+            # replica sync round: re-gather hot rows from the live table —
+            # once per refresh round (replan rounds + the refresh_every
+            # cadence), NOT every step; replicas in between are at most one
+            # refresh round stale (pm/embedding.py docstring bound)
+            if replanned or cache_rows is None or (
+                    lc.refresh_every > 0
+                    and step % lc.refresh_every == 0):
+                state = make_state(params["embed"], cache_ids)
+                cache_rows = state.cache_rows
+                res.refreshes += 1
             batch = dict(batch,
-                         pm_cache_ids=state.cache_ids,
-                         pm_cache_rows=state.cache_rows)
+                         pm_cache_ids=cache_ids.astype(jnp.int32),
+                         pm_cache_rows=cache_rows)
+            # exact-bound accounting: with deduped misses, unique misses
+            # must fit the plan's capacity (zero dense-fallback rounds).
+            # The loader's host-side signals ARE the step's unique ids —
+            # no device-to-host readback on the hot path.
+            uniq = planner.signaled_ids(step)
+            if uniq is not None:
+                n_miss = np.setdiff1d(uniq, plan.cache_ids).size
+                if n_miss > plan.miss_capacity:
+                    res.overflows += 1
             fn = step_fn(plan.miss_capacity)
         else:
             fn = step_fn(0)

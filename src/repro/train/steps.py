@@ -9,27 +9,37 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops
 from repro.models.model import forward, loss_fn
-from repro.optim.optimizers import (adagrad_init, adagrad_update, adam_init,
-                                    adam_update)
+from repro.optim.optimizers import (AdaGradState, adagrad_init,
+                                    adagrad_update, adam_init, adam_update)
 
 
 def make_train_step(cfg: ModelConfig, *, optimizer: str = "adagrad",
                     lr: float = 0.01, pm_miss_capacity: int = 0,
-                    pm_strict: bool = False, remat: bool = True,
+                    pm_strict: bool = False, pm_kernel: bool = False,
+                    remat: bool = True,
                     remat_policy: str = "full",
                     vp_loss_mesh=None, fsdp_spec=None,
                     act_spec=None) -> Callable:
     """Returns train_step(params, opt_state, batch) -> (loss, params, state).
 
     ``pm_miss_capacity > 0`` activates the intent-managed embedding path
-    (batch must then carry pm_cache_ids / pm_cache_rows).
+    (batch must then carry pm_cache_ids / pm_cache_rows); ``pm_kernel``
+    additionally routes the lookup through the Pallas kernels and — for
+    untied AdaGrad runs — applies the embedding update via the fused sparse
+    row kernel on exactly the touched rows instead of a dense (V, D) sweep.
 
     ``vp_loss_mesh``: a Mesh enables the explicit vocab-parallel CE
     (shard_map collective schedule, `repro.models.losses`) instead of the
     GSPMD-derived loss — §Perf iteration 3.
     """
     update = adagrad_update if optimizer == "adagrad" else adam_update
+    # sparse row updates need the gradient support to be exactly the batch
+    # tokens: tied embeddings receive dense head gradients, so they keep
+    # the dense optimizer sweep.
+    sparse_embed = (pm_kernel and pm_miss_capacity > 0
+                    and optimizer == "adagrad" and not cfg.tie_embeddings)
 
     def train_step(params, opt_state, batch):
         def loss(p):
@@ -39,7 +49,8 @@ def make_train_step(cfg: ModelConfig, *, optimizer: str = "adagrad",
                 h, aux, _ = forward(p, cfg, batch, remat=remat,
                                     remat_policy=remat_policy,
                                     pm_miss_capacity=pm_miss_capacity,
-                                    pm_strict=pm_strict, skip_head=True,
+                                    pm_strict=pm_strict, pm_kernel=pm_kernel,
+                                    skip_head=True,
                                     fsdp_spec=fsdp_spec, act_spec=act_spec)
                 head = p["embed"].T if cfg.tie_embeddings else p["head"]
                 return vocab_parallel_ce(
@@ -48,13 +59,39 @@ def make_train_step(cfg: ModelConfig, *, optimizer: str = "adagrad",
             logits, aux, _ = forward(p, cfg, batch, remat=remat,
                                      remat_policy=remat_policy,
                                      pm_miss_capacity=pm_miss_capacity,
-                                     pm_strict=pm_strict,
+                                     pm_strict=pm_strict, pm_kernel=pm_kernel,
                                      fsdp_spec=fsdp_spec,
                                      act_spec=act_spec)
             return loss_fn(logits, batch["labels"], aux)
 
         loss_val, grads = jax.value_and_grad(loss)(params)
-        new_params, new_state = update(grads, opt_state, params, lr=lr)
+        if not sparse_embed:
+            new_params, new_state = update(grads, opt_state, params, lr=lr)
+            return loss_val, new_params, new_state
+
+        # dense update for everything but the managed table
+        rest = {k: v for k, v in params.items() if k != "embed"}
+        rest_g = {k: v for k, v in grads.items() if k != "embed"}
+        rest_acc = {k: v for k, v in opt_state.accum.items() if k != "embed"}
+        new_rest, rest_state = adagrad_update(rest_g, AdaGradState(rest_acc),
+                                              rest, lr=lr)
+        # fused sparse AdaGrad on exactly the touched (unique) rows; pad
+        # slots carry id 0 with a zero gradient.  The slot order is
+        # REVERSED so every pad program (an identity write: zero grad,
+        # original row value) runs before row 0's real update — the grid
+        # executes in order, so the real update always lands last and a
+        # trailing pad can never overwrite it with the stale row.
+        V = cfg.vocab_size
+        tok = batch["tokens"].reshape(-1).astype(jnp.int32)
+        ids = ops.unique_rows(tok, n_slots=tok.shape[0], pad_id=V)[::-1]
+        valid = ids < V
+        ids = jnp.where(valid, ids, 0)
+        rows_g = jnp.take(grads["embed"], ids, axis=0) \
+            * valid[:, None].astype(grads["embed"].dtype)
+        new_emb, new_acc = ops.adagrad_row_update(
+            params["embed"], opt_state.accum["embed"], ids, rows_g, lr=lr)
+        new_params = dict(new_rest, embed=new_emb)
+        new_state = AdaGradState(dict(rest_state.accum, embed=new_acc))
         return loss_val, new_params, new_state
 
     return train_step

@@ -11,6 +11,8 @@ from _hyp import given, settings, st
 from repro.kernels import ops, ref
 from repro.kernels.adagrad_rows import adagrad_row_update
 from repro.kernels.embed_gather import embed_gather
+from repro.kernels.pm_forward import pm_combine, probe_and_compact
+from repro.kernels.scatter_rows import scatter_rows
 
 SHAPES = [
     # (V, D, n, block_d)
@@ -99,6 +101,107 @@ def test_segment_rows_property(n, v, seed):
     np.add.at(dense_from_slots, np.asarray(slot_ids),
               np.asarray(slot_g, dtype=np.float64))
     np.testing.assert_allclose(dense, dense_from_slots, rtol=1e-5, atol=1e-5)
+
+
+class TestProbeAndCompact:
+    def test_dedup_unique_ids_fill_slots(self):
+        cache = jnp.asarray([10, 20, 30], jnp.int32)
+        tok = jnp.asarray([5, 20, 5, 7, 5, 10], jnp.int32)
+        pc = probe_and_compact(cache, tok, 4)
+        assert int(pc.n_miss) == 2                      # unique: {5, 7}
+        np.testing.assert_array_equal(np.asarray(pc.hit),
+                                      [False, True, False, False, False,
+                                       True])
+        in_buf = sorted(int(i) for i in np.asarray(pc.buf_ids)[:2])
+        assert in_buf == [5, 7]
+        # every duplicate of 5 shares one slot
+        slots5 = np.asarray(pc.buf_slot)[[0, 2, 4]]
+        assert len(set(slots5.tolist())) == 1
+        assert not np.any(np.asarray(pc.overflow))
+
+    def test_overflow_marks_unique_beyond_capacity(self):
+        cache = jnp.asarray([100], jnp.int32)
+        tok = jnp.asarray([1, 2, 3, 1], jnp.int32)
+        pc = probe_and_compact(cache, tok, 2)
+        assert int(pc.n_miss) == 3
+        assert int(np.asarray(pc.overflow).sum()) >= 1
+        # overflowed tokens route to the trash slot M
+        over = np.asarray(pc.overflow)
+        assert np.all(np.asarray(pc.buf_slot)[over] == 2)
+
+    @given(seed=st.integers(0, 2**16), t=st.integers(1, 64),
+           m=st.sampled_from([1, 4, 16]))
+    @settings(max_examples=30, deadline=None)
+    def test_property_slots_consistent(self, seed, t, m):
+        """Every non-overflow miss points at a slot holding its own id."""
+        rng = np.random.default_rng(seed)
+        cache = jnp.asarray(np.sort(rng.choice(64, 8, replace=False)),
+                            jnp.int32)
+        tok = jnp.asarray(rng.integers(0, 64, size=(t,)), jnp.int32)
+        pc = probe_and_compact(cache, tok, m)
+        buf = np.concatenate([np.asarray(pc.buf_ids), [-1]])
+        tok_np, hit = np.asarray(tok), np.asarray(pc.hit)
+        served = ~hit & ~np.asarray(pc.overflow)
+        np.testing.assert_array_equal(
+            buf[np.asarray(pc.buf_slot)[served]], tok_np[served])
+        assert int(pc.n_miss) == \
+            np.setdiff1d(np.unique(tok_np), np.asarray(cache)).size
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pm_combine_matches_ref(dtype):
+    rng = np.random.default_rng(3)
+    C, M, T, D = 8, 4, 32, 256
+    cache_rows = jnp.asarray(rng.normal(size=(C, D)), dtype=dtype)
+    buf_rows = jnp.asarray(rng.normal(size=(M + 1, D)), dtype=dtype)
+    hit = jnp.asarray(rng.integers(0, 2, size=(T,)).astype(bool))
+    cache_slot = jnp.asarray(rng.integers(0, C, size=(T,)), jnp.int32)
+    buf_slot = jnp.asarray(rng.integers(0, M + 1, size=(T,)), jnp.int32)
+    out = pm_combine(hit, cache_slot, buf_slot, cache_rows, buf_rows,
+                     block_d=128, interpret=True)
+    exp = ref.pm_combine_ref(hit, cache_slot, buf_slot, cache_rows,
+                             buf_rows)
+    assert out.dtype == cache_rows.dtype
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_scatter_rows_matches_ref(dtype):
+    rng = np.random.default_rng(4)
+    R, n, D = 64, 16, 256
+    base = jnp.zeros((R, D), dtype=dtype)
+    ids = jnp.asarray(rng.choice(R, size=(n,), replace=False), jnp.int32)
+    rows = jnp.asarray(rng.normal(size=(n, D)), dtype=dtype)
+    out = scatter_rows(base, ids, rows, block_d=128, interpret=True)
+    exp = ref.scatter_rows_ref(base, ids, rows)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+    # untouched rows keep the aliased base content
+    mask = np.ones(R, bool)
+    mask[np.asarray(ids)] = False
+    assert not np.any(np.asarray(out)[mask])
+
+
+def test_scatter_rows_trash_collisions_safe():
+    """Pad slots collide on a trash row with zero rows — the real rows
+    must be untouched (managed-lookup backward pattern)."""
+    R, D = 17, 128                      # rows 0..15 real, row 16 trash
+    base = jnp.zeros((R, D), jnp.float32)
+    ids = jnp.asarray([3, 9, 16, 16, 16], jnp.int32)
+    rows = jnp.concatenate([jnp.ones((2, D)), jnp.zeros((3, D))])
+    out = np.asarray(scatter_rows(base, ids, rows, block_d=128,
+                                  interpret=True))
+    assert np.all(out[3] == 1.0) and np.all(out[9] == 1.0)
+    assert not np.any(out[16])
+
+
+def test_segment_rows_pad_id_sentinel():
+    ids = jnp.asarray([7, 7, 3], jnp.int32)
+    grads = jnp.ones((3, 4), jnp.float32)
+    slot_ids, slot_g = ops.segment_rows(ids, grads, n_slots=5, pad_id=99)
+    np.testing.assert_array_equal(np.asarray(slot_ids), [3, 7, 99, 99, 99])
+    np.testing.assert_allclose(np.asarray(slot_g)[:2].sum(axis=1),
+                               [4.0, 8.0])
+    assert not np.any(np.asarray(slot_g)[2:])
 
 
 def test_ops_fallback_matches_pallas():

@@ -66,6 +66,83 @@ class TestTrainLoop:
                                    rtol=1e-4, atol=1e-5)
         assert r_pm.plans >= 1
 
+    def test_refresh_only_on_replan_rounds(self):
+        """ISSUE 2 regression: the loop used to re-gather the whole replica
+        cache from the table EVERY step.  With refresh_every=0 the cache is
+        synchronized exactly once per replan round (pm/embedding.py's
+        once-per-refresh-round design)."""
+        cfg = small_cfg()
+        res = train_loop(cfg, LoopConfig(steps=40, batch=4, seq=32, pm=True,
+                                         cache_capacity=64, n_shards=2,
+                                         refresh_every=0, log_every=0,
+                                         seed=3))
+        assert res.refreshes == res.plans
+        # planning rounds come at most every plan_every=8 steps (+1 for
+        # the initial plan), so refreshes must be bounded accordingly
+        assert res.refreshes <= 40 // 8 + 1
+
+    def test_staleness_bounded_loss(self):
+        """Replicas at most one refresh round stale: the loss trajectory
+        with a sparse refresh cadence stays within a tight envelope of the
+        refresh-every-step trajectory."""
+        cfg = small_cfg()
+        base = dict(steps=40, batch=4, seq=32, pm=True, cache_capacity=64,
+                    n_shards=2, log_every=0, seed=3)
+        r1 = train_loop(cfg, LoopConfig(**base))
+        r6 = train_loop(cfg, LoopConfig(**base, refresh_every=6))
+        assert r6.refreshes < r1.refreshes
+        np.testing.assert_allclose(r6.losses, r1.losses, atol=0.05)
+
+    @pytest.mark.slow
+    def test_exact_bound_zero_overflow_200_steps(self):
+        """The planner's intent-derived miss capacity is exact again: over
+        200 steps not a single lookup needs the dense overflow fallback."""
+        cfg = small_cfg()
+        res = train_loop(cfg, LoopConfig(steps=200, batch=4, seq=32,
+                                         pm=True, cache_capacity=64,
+                                         n_shards=2, refresh_every=4,
+                                         log_every=0, seed=5))
+        assert res.overflows == 0
+        assert res.plans > 1
+        assert all(np.isfinite(res.losses))
+
+    def test_kernel_loop_matches_jnp_loop(self):
+        """LoopConfig.kernel routes lookup + sparse row update through the
+        Pallas kernels (interpret mode here) with identical losses."""
+        cfg = small_cfg().reduced(tie_embeddings=False, n_heads=3,
+                                  n_kv_heads=3)
+        base = dict(steps=4, batch=2, seq=16, pm=True, cache_capacity=64,
+                    n_shards=2, log_every=0, seed=3)
+        r_jnp = train_loop(cfg, LoopConfig(**base))
+        r_ker = train_loop(cfg, LoopConfig(**base, kernel=True))
+        np.testing.assert_allclose(r_ker.losses, r_jnp.losses,
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_sparse_rows_pad_cannot_cancel_row0(self):
+        """Regression: pad slots are remapped to row 0 with zero grads; a
+        pad program running AFTER row 0's real update would overwrite it
+        with the stale row.  The reversed slot order guarantees the real
+        update lands last — sparse == dense AdaGrad even when token 0 and
+        duplicates coexist."""
+        from repro.kernels import ops
+        V, D = 16, 128
+        table = jnp.ones((V, D), jnp.float32)
+        accum = jnp.zeros((V, D), jnp.float32)
+        tok = jnp.asarray([0, 3, 5, 3], jnp.int32)   # dup -> pad slot
+        dense_g = jnp.zeros((V, D)).at[tok].add(jnp.ones((4, D)))
+        ids = ops.unique_rows(tok, n_slots=4, pad_id=V)[::-1]
+        valid = ids < V
+        ids = jnp.where(valid, ids, 0)
+        rows_g = jnp.take(dense_g, ids, axis=0) * valid[:, None]
+        new_t, new_a = ops.adagrad_row_update(table, accum, ids, rows_g,
+                                              lr=0.1)
+        a_ref = accum + dense_g * dense_g
+        t_ref = table - 0.1 * dense_g / (jnp.sqrt(a_ref) + 1e-8)
+        np.testing.assert_allclose(np.asarray(new_t), np.asarray(t_ref),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(new_a), np.asarray(a_ref),
+                                   rtol=1e-6)
+
     def test_pm_cache_actually_hits(self):
         """The planner must place genuinely multi-shard-hot rows: with a
         Zipf corpus the hot tokens dominate, so cache hit count is high."""
@@ -137,6 +214,32 @@ class TestCheckpoint:
         b = jax.tree_util.tree_leaves(restored["params"])
         for x, y in zip(a, b):
             np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_roundtrip_through_train_loop(self, tmp_path):
+        """Checkpoints written by train_loop restore back into it: the
+        manifest step survives and the restored table is the trained one,
+        not a fresh init."""
+        cfg = small_cfg()
+        ck = str(tmp_path / "ck")
+        train_loop(cfg, LoopConfig(steps=6, batch=2, seq=16, pm=False,
+                                   ckpt_dir=ck, ckpt_every=4, log_every=0,
+                                   seed=3))
+        latest = checkpoint.latest_step(ck)
+        assert latest is not None and latest.endswith("step_0000004")
+        # init_from accepts the checkpoint ROOT too (newest step resolved)
+        res = train_loop(cfg, LoopConfig(steps=2, batch=2, seq=16, pm=False,
+                                         init_from=ck, log_every=0,
+                                         seed=3))
+        assert res.start_step == 4
+        assert len(res.losses) == 2 and all(np.isfinite(res.losses))
+        # restored params differ from a fresh seed-3 init (training stuck)
+        fresh = init_model(cfg, jax.random.PRNGKey(3))
+        like = {"params": init_model(cfg, jax.random.PRNGKey(0)),
+                "opt": make_opt_init("adagrad")(fresh)}
+        restored, step = checkpoint.load(latest, like)
+        assert step == 4
+        assert not np.allclose(np.asarray(restored["params"]["embed"]),
+                               np.asarray(fresh["embed"]))
 
     def test_latest_step(self, tmp_path):
         for s in (1, 5, 12):
