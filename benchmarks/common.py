@@ -10,7 +10,11 @@ from __future__ import annotations
 import time
 from typing import Callable, Dict, List, Optional
 
-from repro.core.api import CostModel, Metrics
+from repro.core.api import (CostModel, LatencyRecorder,  # noqa: F401
+                            Metrics)
+#   LatencyRecorder: the shared percentile/latency recorder (also used by
+#   the serving scheduler and serve_bench) — numpy-only, so importing it
+#   here keeps the simulator benchmarks JAX-free
 from repro.core.baselines import (NuPSStatic, SelectiveReplicationSSP,
                                   StaticFullReplication, StaticPartitioning)
 from repro.core.manager import AdaPM
@@ -86,3 +90,21 @@ def emit(rows: List[str], benchmark: str, variant: str, task: str,
     row = f"{benchmark},{variant},{task},{metric},{value}"
     print(row)
     rows.append(row)
+
+
+def time_fn(fn: Callable, *, iters: int = 5, warmup: int = 1,
+            block: Optional[Callable] = None) -> float:
+    """Mean microseconds per call of ``fn()`` over ``iters`` timed calls
+    after ``warmup`` untimed ones (compile/caches).  ``block`` is applied
+    to the last result before stopping the clock (pass
+    ``jax.block_until_ready`` for async backends).  Replaces the ad-hoc
+    timing loops that used to live in each benchmark module."""
+    out = None
+    for _ in range(warmup):
+        out = fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    if block is not None:
+        block(out)
+    return (time.perf_counter() - t0) / iters * 1e6

@@ -16,7 +16,6 @@ CLI: ``python -m benchmarks.kernels_bench [--quick]``.
 
 from __future__ import annotations
 
-import time
 from typing import List
 
 import jax
@@ -28,14 +27,12 @@ from repro.kernels import ops, ref
 from repro.pm.embedding import plain_lookup, pm_lookup
 from repro.pm.planner import _bucket
 
+from .common import time_fn
+
 
 def _time(fn, *args, iters=5) -> float:
-    fn(*args)  # warmup/compile
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+    return time_fn(lambda: fn(*args), iters=iters,
+                   block=jax.block_until_ready)
 
 
 def _managed_vs_plain(rows: List[str], *, V: int, D: int, B: int, S: int,

@@ -8,6 +8,9 @@ One module per paper table/figure (DESIGN.md §8):
   fig15_traces          — Figure 15 (per-key management traces)
   kernels_bench         — kernel micro-benches + TPU roofline bounds
   scale_sweep           — key-count scaling of the vectorized intent engine
+  serve_bench           — online serving runtime vs plain lookup
+                          (throughput/latency + drift adaptation,
+                          BENCH_serve.json)
 
 Output: ``benchmark,variant,task,metric,value`` CSV rows on stdout and in
 ``benchmarks/results/benchmarks.csv``.  ``--quick`` additionally writes
@@ -33,6 +36,7 @@ _ALIASES = {
     "table2_communication": "table2",
     "fig15_traces": "fig15",
     "kernels_bench": "kernels",
+    "serve_bench": "serve",
 }
 
 
@@ -46,7 +50,7 @@ def main(argv=None):
 
     from . import (fig6_overall, fig7_scalability, fig8_timing,
                    fig15_traces, kernels_bench, quality_mf, scale_sweep,
-                   table2_communication)
+                   serve_bench, table2_communication)
 
     scale = 0.2 if args.quick else 0.5
     benches = {
@@ -62,6 +66,7 @@ def main(argv=None):
         "kernels": lambda: kernels_bench.run(quick=args.quick),
         "quality_mf": quality_mf.run,
         "scale_sweep": lambda: scale_sweep.run(quick=args.quick),
+        "serve": lambda: serve_bench.run(quick=args.quick),
     }
     only = None
     if args.only:

@@ -1,0 +1,230 @@
+"""Serving benchmark: the intent-signaled online runtime vs plain lookup.
+
+Measures end-to-end request throughput and p50/p99 latency of the
+managed serving runtime (`repro.serve`) against the unmanaged
+vocab-parallel baseline across Zipf skews and hot-set drift rates, plus
+a drift-adaptation section that checks the acceptance invariants:
+
+  (a) managed serving >= 1.5x plain-lookup throughput at Zipf skew >= 1.0;
+  (b) after a hot-set rotation the miss rate returns to within 2x of the
+      pre-rotation steady state within one replan round;
+  (c) zero silently-dropped (zero-served) requests across the run.
+
+Cost model: the embedding is vocab-sharded ``N_SHARDS`` ways and every
+row fetched from a non-local shard moves through the emulated
+vocab-parallel collective (`pm.embedding.shard_partial_sum`: one
+materialized (n, D) partial per shard — the single-host stand-in for the
+all-reduce's wire bytes).  The plain baseline moves EVERY token's row
+through it; the managed path moves only the compact intent-planned miss
+buffer and serves cache hits locally.
+
+Both variants serve identical replayed request traces through the same
+queue/scheduler stack, run back-to-back per repetition; the reported
+speedup is the median of per-rep throughput ratios (paired to cancel
+this container's bursty co-tenant noise).  Writes ``BENCH_serve.json``
+at the repo root next to BENCH_quick/BENCH_scale.
+
+CLI: ``python -m benchmarks.serve_bench [--quick]``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import replace
+from typing import Dict, List
+
+import numpy as np
+
+from repro.serve import (DriftingZipfStream, ReplayStream, ServeConfig,
+                         ServingRuntime)
+
+from .common import emit
+
+_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                    "BENCH_serve.json")
+
+# deployment-scale cost model: a 64-way vocab-sharded table (the intent
+# engine's own node cap) — managed wins scale with the shard count
+# because only the miss buffer pays the collective
+N_SHARDS = 64
+V, D = 65536, 512
+B, K = 64, 64            # requests per micro-batch x keys per request
+C = 8192                 # replica-cache capacity (deep enough to absorb a
+#                          mixed old/new hot set across a rotation)
+REPS = 7
+ROUNDS = 32
+MEASURE_FROM = 4
+STEADY_WINDOW = 5        # rounds of pre-rotation steady state
+
+
+def _run_once(table, cfg: ServeConfig, replay: ReplayStream, warm):
+    rt = ServingRuntime(table, cfg)
+    rt._managed_fn = warm._managed_fn
+    rt._plain_fn = warm._plain_fn
+    return rt.run(replay, ROUNDS, measure_from=MEASURE_FROM)
+
+
+def _paired_runs(table, cfg: ServeConfig, replay: ReplayStream,
+                 reps: int):
+    """Interleaved managed/plain reps on the same replayed trace.
+
+    The container's 2 CPUs see bursty co-tenant noise that can slow a
+    whole run 2x; running the pair back-to-back and taking the *median of
+    per-rep throughput ratios* cancels that common-mode noise, which
+    separate medians cannot."""
+    plain_cfg = replace(cfg, managed=False)
+    warm = ServingRuntime(table, cfg)
+    warm.run(replay, max(10, MEASURE_FROM + 4), measure_from=2)
+    pwarm = ServingRuntime(table, plain_cfg)
+    pwarm.run(replay, 6, measure_from=2)
+    warm._plain_fn = pwarm._plain_fn
+    pairs = []
+    for _ in range(reps):
+        m = _run_once(table, cfg, replay, warm)
+        p = _run_once(table, plain_cfg, replay, warm)
+        pairs.append((m.throughput_rps / max(p.throughput_rps, 1e-9), m, p))
+    pairs.sort(key=lambda t: t[0])
+    return pairs[len(pairs) // 2]
+
+
+def _drift_metrics(res, rotation_rounds: List[int]) -> List[Dict]:
+    """Per-rotation recovery analysis over the runtime's miss trace.
+
+    A rotation at stream round R changes arrivals enqueued at runtime
+    round R - backlog, which reach the scheduler ~backlog rounds later —
+    so its effect on *served* traffic starts at runtime round ~R (the
+    steady-state queue depth equals the warmup backlog).  Replans may
+    adapt even earlier, from the rotated intent still queued."""
+    trace = dict(res.miss_trace)
+    out = []
+    rots = list(rotation_rounds)
+    for i, rot in enumerate(rots):
+        if rot <= STEADY_WINDOW or rot >= res.rounds - 2:
+            continue
+        nxt = rots[i + 1] if i + 1 < len(rots) else res.rounds
+        pre = res.steady_miss_rate(rot - STEADY_WINDOW, rot)
+        replans = [r for r in res.replan_rounds if r >= rot]
+        if pre is None or not replans:
+            continue
+        rr = replans[0]
+        spike = max((trace[r] for r in range(rot, rr + 1) if r in trace),
+                    default=pre)
+        rec_hi = min(nxt, rr + 1 + STEADY_WINDOW)
+        recovered = res.steady_miss_rate(rr + 1, rec_hi)
+        if recovered is None:
+            # no executed batch between the replan and the next rotation:
+            # nothing measured, so nothing may be claimed — skip, and the
+            # headline bool below requires at least one measured entry
+            continue
+        ratio = recovered / max(pre, 1e-9)
+        out.append({
+            "rotation_round": rot,
+            "pre_rotation_miss": round(pre, 4),
+            "spike_miss": round(spike, 4),
+            "recovered_miss": round(recovered, 4),
+            "recovery_ratio_vs_pre": round(ratio, 3),
+            "replan_lag_rounds": rr - rot,
+            "recovered_within_one_replan": bool(ratio <= 2.0),
+        })
+    return out
+
+
+def run(quick: bool = False) -> List[str]:
+    t_start = time.time()
+    rows: List[str] = []
+    skews = [1.0, 1.1] if quick else [1.0, 1.1, 1.5]
+    drift_rates = [0, 12] if quick else [0, 12, 20]   # rotate_every rounds
+    reps = REPS if quick else REPS + 2
+
+    rng = np.random.default_rng(0)
+    table = rng.normal(size=(V, D)).astype(np.float32)
+    base = ServeConfig(vocab=V, batch_requests=B, keys_per_request=K,
+                       cache_capacity=C, n_shards=N_SHARDS, replan_every=8)
+    backlog = base.replan_every + 2
+
+    throughput = []
+    drift_entries = []
+    zero_served_total = 0
+    served_total = 0
+    requeues_total = 0
+
+    for zipf_a in skews:
+        for rot in drift_rates:
+            scenario = "rotate" if rot else "steady"
+            stream = DriftingZipfStream(
+                V, K, zipf_a=zipf_a, arrival_rate=B, scenario=scenario,
+                rotate_every=rot or 32, seed=3)
+            replay = ReplayStream.record(stream, ROUNDS + backlog + 4)
+            tag = f"zipf{zipf_a}_rot{rot}"
+
+            speedup, m, p = _paired_runs(table, base, replay, reps)
+            zero_served_total += m.zero_served
+            served_total += m.served + p.served
+            requeues_total += m.requeues
+            plain_rps, plain_p50, plain_p99 = (
+                p.throughput_rps, p.p50_ms, p.p99_ms)
+            emit(rows, "serve", "managed", tag, "throughput_rps",
+                 round(m.throughput_rps, 1))
+            emit(rows, "serve", "plain", tag, "throughput_rps",
+                 round(plain_rps, 1))
+            emit(rows, "serve", "managed", tag, "speedup_x",
+                 round(speedup, 2))
+            emit(rows, "serve", "managed", tag, "p50_ms",
+                 round(m.p50_ms, 2))
+            emit(rows, "serve", "managed", tag, "p99_ms",
+                 round(m.p99_ms, 2))
+            throughput.append({
+                "zipf": zipf_a, "rotate_every": rot,
+                "managed_rps": round(m.throughput_rps, 1),
+                "plain_rps": round(plain_rps, 1),
+                "speedup_x": round(speedup, 2),
+                "managed_p50_ms": round(m.p50_ms, 2),
+                "managed_p99_ms": round(m.p99_ms, 2),
+                "plain_p50_ms": round(plain_p50, 2),
+                "plain_p99_ms": round(plain_p99, 2),
+                "steady_miss_rate": round(
+                    m.steady_miss_rate(MEASURE_FROM, m.rounds) or 0.0, 4),
+                "requeues": m.requeues, "zero_served": m.zero_served,
+            })
+            if rot:
+                for entry in _drift_metrics(m, replay.rotation_rounds):
+                    entry.update({"zipf": zipf_a, "rotate_every": rot})
+                    drift_entries.append(entry)
+                    emit(rows, "serve", "managed", tag,
+                         "recovery_ratio_vs_pre",
+                         entry["recovery_ratio_vs_pre"])
+
+    speedups = [t["speedup_x"] for t in throughput]
+    summary = {
+        "config": {"vocab": V, "dim": D, "batch_requests": B,
+                   "keys_per_request": K, "cache_capacity": C,
+                   "n_shards": N_SHARDS, "replan_every": base.replan_every,
+                   "reps": reps, "rounds": ROUNDS, "quick": quick},
+        "throughput": throughput,
+        "min_speedup_at_zipf_ge_1.0": min(speedups),
+        "drift": drift_entries,
+        # non-vacuous: requires at least one measured post-replan window
+        "drift_all_recovered_within_one_replan": bool(drift_entries) and
+        all(e["recovered_within_one_replan"] for e in drift_entries),
+        "zero_served_total": zero_served_total,
+        "requeues_total": requeues_total,
+        "requests_served_total": served_total,
+        "wall_clock_s": round(time.time() - t_start, 2),
+    }
+    with open(_OUT, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"wrote {os.path.normpath(_OUT)}")
+    emit(rows, "serve", "managed", "ALL", "min_speedup_x",
+         round(min(speedups), 2))
+    emit(rows, "serve", "managed", "ALL", "zero_served", zero_served_total)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized smoke (2 skews x 2 drift rates)")
+    run(quick=ap.parse_args().quick)

@@ -18,7 +18,7 @@ import numpy as np
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.data.batches import make_batch
 from repro.models.model import forward, init_cache, init_model
-from repro.train.steps import make_serve_step
+from repro.train.steps import make_prefill_decode_step, make_serve_step
 
 
 def main():
@@ -37,15 +37,18 @@ def main():
     max_seq = P + args.new_tokens + 1
     cache = init_cache(cfg, B, max_seq=max_seq)
 
-    # prefill: feed the prompt token-by-token through the decode path
-    # (simple and family-uniform; a fused prefill is the prefill_32k shape)
+    # fused prefill: the whole prompt in ONE jit entry (chunked attention
+    # for kv-cache families, in-jit scan for recurrent state) — the old
+    # token-by-token loop re-entered jit P times and dominated wall-clock
+    # at --prompt-len 64+
     serve = jax.jit(make_serve_step(cfg))
+    prefill = jax.jit(make_prefill_decode_step(cfg))
     if cfg.family == "encdec":
         from repro.models.model import _encoder
         cache["enc_out"] = _encoder(params, cfg, batch["frames"])
     t0 = time.time()
-    for t in range(P):
-        logits, cache = serve(params, cache, batch["tokens"][:, t:t + 1])
+    logits, cache = prefill(params, cache, batch["tokens"])
+    logits = jax.block_until_ready(logits)
     t_prefill = time.time() - t0
 
     tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)

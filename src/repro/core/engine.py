@@ -204,6 +204,97 @@ class IntentStore:
         return len(self.keys())
 
 
+class StreamingIntentBuffer:
+    """Streaming intent for the online serving runtime (DESIGN.md §9).
+
+    Training intent arrives in fixed windows (the loader signals step
+    ``s`` for clock ``[s, s+1)``); serving intent *streams*: a request's
+    key set is known the moment it is enqueued, and the intent stays live
+    until the request is served.  This buffer is the SoA store for those
+    open-ended windows — ``ingest`` on enqueue, ``expire`` on serve — and
+    ``snapshot`` projects the live intent onto the scheduler's logical
+    clock so the window classifiers above (`concurrent_intent`,
+    `intent_miss_bound`) apply unchanged: a queued request at position
+    ``p`` runs in micro-batch ``p // batch_size`` (the clock tick) at slot
+    ``p % batch_size`` (the "node" — concurrent intent from >= 2 requests
+    in one batch -> replicate, §4.1).
+    """
+
+    __slots__ = ("key", "req", "n")
+
+    def __init__(self, cap: int = 256):
+        self.key = np.empty(cap, np.int64)
+        self.req = np.empty(cap, np.int64)
+        self.n = 0
+
+    def __len__(self) -> int:
+        return self.n
+
+    def _grow(self, need: int) -> None:
+        cap = len(self.key)
+        if need <= cap:
+            return
+        while cap < need:
+            cap *= 2
+        for name in ("key", "req"):
+            old = getattr(self, name)
+            new = np.empty(cap, old.dtype)
+            new[: self.n] = old[: self.n]
+            setattr(self, name, new)
+
+    def ingest(self, req_id: int, keys) -> None:
+        """Signal: request ``req_id`` will touch ``keys`` when scheduled."""
+        keys = np.atleast_1d(np.asarray(keys, np.int64))
+        self.ingest_batch(np.full(len(keys), req_id, np.int64), keys)
+
+    def ingest_batch(self, req_ids: np.ndarray, keys: np.ndarray) -> None:
+        """Vectorized ingest: ``req_ids[i]`` will touch ``keys[i]`` —
+        one append for a whole admission wave instead of a Python loop
+        per request (the enqueue path is on the serving hot path)."""
+        keys = np.asarray(keys, np.int64)
+        m = len(keys)
+        if m == 0:
+            return
+        self._grow(self.n + m)
+        self.key[self.n: self.n + m] = keys
+        self.req[self.n: self.n + m] = np.asarray(req_ids, np.int64)
+        self.n += m
+
+    def expire(self, req_ids) -> None:
+        """Serving a request expires its intent (the §4.1 expiry arm:
+        replicas for keys nobody still wants fall out at the next plan)."""
+        req_ids = np.atleast_1d(np.asarray(req_ids, np.int64))
+        if len(req_ids) == 0 or self.n == 0:
+            return
+        keep = ~np.isin(self.req[: self.n], req_ids)
+        m = int(keep.sum())
+        self.key[:m] = self.key[: self.n][keep]
+        self.req[:m] = self.req[: self.n][keep]
+        self.n = m
+
+    def snapshot(self, order: np.ndarray, batch_size: int
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Project live intent onto the queue order: ``order`` is the
+        queued request ids front-to-back.  Returns (keys, slots, ticks)
+        for the window classifiers.  Intent of in-flight requests (popped
+        but not yet served/expired) is not in ``order`` and is dropped
+        from the snapshot — their future is the executing batch."""
+        z = np.zeros(0, np.int64)
+        order = np.asarray(order, np.int64)
+        if self.n == 0 or len(order) == 0:
+            return z, z, z
+        key, req = self.key[: self.n], self.req[: self.n]
+        sidx = np.argsort(order, kind="stable")
+        j = np.searchsorted(order[sidx], req)
+        j = np.clip(j, 0, len(order) - 1)
+        pos = sidx[j]
+        queued = order[pos] == req
+        pos = pos[queued]
+        return (key[queued],
+                pos % batch_size,
+                pos // batch_size)
+
+
 class OwnerTable:
     """Vectorized ownership + location caches (§B.1.1, §B.2.3).
 

@@ -36,6 +36,23 @@ class SyntheticCorpus:
         return self.perm[flat].reshape(shape).astype(np.int32)
 
 
+class DriftingZipfCorpus(SyntheticCorpus):
+    """Zipf stream whose hot set drifts: `rotate()` re-draws the rank ->
+    token-id permutation, so yesterday's head becomes tail mass overnight.
+    This is the serving-side access pattern (hot entities change by the
+    minute) the online runtime adapts to; the training loader can use it
+    too for drift-robustness runs."""
+
+    def __init__(self, vocab_size: int, zipf_a: float = 1.1, seed: int = 0):
+        super().__init__(vocab_size, zipf_a=zipf_a, seed=seed)
+        self._perm_rng = np.random.default_rng(seed + 2)
+        self.rotations = 0
+
+    def rotate(self) -> None:
+        self.perm = self._perm_rng.permutation(self.V)
+        self.rotations += 1
+
+
 class IntentSignalingLoader:
     """Iterator of (step, batch) that runs ``prefetch`` steps ahead and
     signals intent per data shard as each batch is constructed."""

@@ -209,22 +209,27 @@ def flash_attention(q, k, v, *, causal: bool, window: int = 0,
 
 
 def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
-    """Single-token attention against a KV cache.
+    """Chunked attention against a KV cache.
 
-    q: (B, 1, H, d); caches: (B, S, KvH, d); cache_len: valid prefix length
-    (the new token's k/v must already be written at ``cache_len - 1``).
+    q: (B, Sq, H, d); caches: (B, S, KvH, d); cache_len: valid prefix
+    length (the chunk's k/v must already be written at ``cache_len - Sq``).
+    Causal *within* the chunk: query i sits at absolute position
+    ``cache_len - Sq + i`` and attends to positions <= its own — for the
+    single-token decode case (Sq=1) this reduces to the old
+    ``pos < cache_len`` mask; Sq>1 is the fused prefill path.
     """
-    B, _, H, hd = q.shape
+    B, Sq, H, hd = q.shape
     S, KvH = k_cache.shape[1], k_cache.shape[2]
     k = _repeat_kv(k_cache, H // KvH)
     v = _repeat_kv(v_cache, H // KvH)
     pos = jnp.arange(S)
-    valid = pos < cache_len
+    q_pos = cache_len - Sq + jnp.arange(Sq)
+    valid = pos[None, :] <= q_pos[:, None]
     if window:
-        valid &= pos >= (cache_len - window)
+        valid &= pos[None, :] > (q_pos[:, None] - window)
     s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
                    preferred_element_type=jnp.float32) / math.sqrt(hd)
-    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    s = jnp.where(valid[None, None, :, :], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
                    preferred_element_type=jnp.float32)
@@ -253,8 +258,9 @@ def attention_block(x, p: Params, cfg, positions, *, cache=None,
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
     if cache is not None:
-        # decode: write k/v at position cache_len-1, attend to the prefix
-        idx = cache_len - 1
+        # decode: write the S-token chunk at cache_len - S (S=1 for plain
+        # decode; S>1 for the fused prefill), attend to the prefix
+        idx = cache_len - S
         k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k, idx, axis=1)
         v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v, idx, axis=1)
         o = decode_attention(q, k_cache, v_cache, cache_len,

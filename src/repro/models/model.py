@@ -455,7 +455,10 @@ def forward(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
     positions = batch.get("positions")
     if positions is None:
         if cache is not None:
-            positions = jnp.broadcast_to(cache["len"] - 1, (B, S))
+            # the S-token chunk occupies absolute positions
+            # [len - S, len) — S=1 decode keeps the old len - 1
+            positions = jnp.broadcast_to(
+                cache["len"] - S + jnp.arange(S, dtype=jnp.int32), (B, S))
         else:
             positions = jnp.broadcast_to(jnp.arange(S), (B, S))
         if cfg.mrope:

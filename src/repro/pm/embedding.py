@@ -33,6 +33,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops
 from repro.kernels.pm_forward import probe_and_compact
@@ -149,3 +150,153 @@ pm_lookup.defvjp(_pm_lookup_fwd, _pm_lookup_bwd)
 def plain_lookup(table, tokens):
     """Unmanaged vocab-parallel lookup (static-partitioning baseline)."""
     return jnp.take(table, tokens.astype(jnp.int32), axis=0)
+
+
+# ---------------------------------------------------------------- serving
+
+class ServeLookupResult(NamedTuple):
+    """Outputs of the serving-mode lookup (all static shapes)."""
+
+    out: jnp.ndarray       # (B, K, D) rows; overflow slots are zeros and
+    #                        MUST NOT be served (re-queue their requests)
+    hit: jnp.ndarray       # (B, K) bool, served from the replica cache
+    overflow: jnp.ndarray  # (B, K) bool, unique misses beyond capacity
+    n_miss: jnp.ndarray    # () int32, unique missed ids this batch
+
+
+def shard_partial_sum(table, ids, n_shards: int, *, kernel: bool = False):
+    """Vocab-parallel gather emulation: with the table sharded into
+    ``n_shards`` contiguous vocab blocks, each shard gathers the rows it
+    owns (zeros elsewhere) and the results are summed — the masked
+    partial-sum all-reduce a TPU pays, materialized as n_shards masked
+    (n, D) buffers on this single-device backend.  Each partial passes
+    through `lax.optimization_barrier` so XLA cannot algebraically fuse
+    the mask-and-sum back into a plain gather: every shard's message is a
+    real (n, D) materialization, the single-host stand-in for its wire
+    bytes.  That cost is proportional to ``n_shards * len(ids) * D``,
+    which is exactly the lever the managed serving path pulls: it routes
+    only the compact miss buffer (M ids) through this collective instead
+    of every token."""
+    rows = ops.embed_gather(table, ids.astype(jnp.int32),
+                            use_pallas=kernel) if kernel \
+        else jnp.take(table, ids.astype(jnp.int32), axis=0)
+    if n_shards <= 1:
+        return rows
+    V = table.shape[0]
+    block = -(-V // n_shards)
+    owner = ids.astype(jnp.int32) // block
+    partial = jnp.zeros_like(rows)
+    for s in range(n_shards):
+        msg = jnp.where((owner == s)[:, None], rows, 0.0)
+        partial = partial + jax.lax.optimization_barrier(msg)
+    return partial
+
+
+def plain_serve_lookup(table, tokens, *, n_shards: int = 1):
+    """Unmanaged serving baseline: every token's row moves through the
+    vocab-parallel collective (the dense (T, D) partial-sum)."""
+    B, K = tokens.shape
+    tok = tokens.reshape(B * K)
+    out = shard_partial_sum(table, tok, n_shards)
+    return out.reshape(B, K, -1)
+
+
+def serve_lookup(table, cache_ids, cache_rows, tokens, miss_capacity: int,
+                 *, n_shards: int = 1,
+                 kernel: bool = False) -> ServeLookupResult:
+    """Serving-mode managed lookup: read-only (no VJP, no optimizer), and
+    it NEVER falls back to a dense gather silently — misses beyond the
+    planned capacity come back as zeros with their ``overflow`` flag set,
+    and the runtime re-queues those requests (the request is served late,
+    never wrong).  Hits read the local replica cache (no collective);
+    unique misses are compacted into the intent-sized buffer and only that
+    (M+1, D) buffer moves through the emulated vocab-parallel collective
+    (`shard_partial_sum`).
+    """
+    B, K = tokens.shape
+    T = B * K
+    M = min(miss_capacity, T)
+    D = table.shape[1]
+    tok = tokens.reshape(T).astype(jnp.int32)
+    pc = probe_and_compact(cache_ids, tok, M)
+    buf_rows = shard_partial_sum(table, pc.buf_ids, n_shards, kernel=kernel)
+    buffer = jnp.concatenate(
+        [buf_rows, jnp.zeros((1, D), buf_rows.dtype)])        # trash row M
+    out = ops.pm_combine(pc.hit, pc.cache_slot, pc.buf_slot,
+                         cache_rows, buffer, use_pallas=kernel)
+    # overflow tokens route to the trash row -> zeros; make that explicit
+    # (a planned buf id of 0 must not leak row 0 into an overflow slot)
+    out = jnp.where(pc.overflow[:, None], 0.0, out)
+    return ServeLookupResult(out.reshape(B, K, D),
+                             pc.hit.reshape(B, K),
+                             pc.overflow.reshape(B, K),
+                             pc.n_miss)
+
+
+class HostProbe(NamedTuple):
+    """Host-side index stage of the serving lookup (all numpy)."""
+
+    hit: np.ndarray         # (T,) bool, token served by the replica cache
+    cache_slot: np.ndarray  # (T,) int32 cache row (clipped; valid on hit)
+    buf_ids: np.ndarray     # (M,) int32 unique missed ids asc (pad: 0)
+    buf_slot: np.ndarray    # (T,) int32 buffer slot per token (M = trash)
+    overflow: np.ndarray    # (T,) bool, unique misses beyond capacity
+    n_miss: int             # unique missed ids (may exceed M)
+
+
+def probe_host(cache_ids, tok, miss_capacity: int) -> HostProbe:
+    """Numpy mirror of `kernels.pm_forward.probe_and_compact` for the
+    serving runtime's admission path.
+
+    On the serving hot path the scheduler holds the batch's token ids on
+    the host the moment the batch is formed (they came out of the request
+    queue) — so the whole index stage (probe, dedup, compact, overflow
+    flags) runs here in numpy at admission time, and the device executes
+    pure data movement (`planned_serve_lookup`).  This is the same
+    scalar-path/data-path split the Pallas kernels use (indices in SMEM
+    via scalar prefetch, rows in VMEM), applied host-side; it also means
+    miss-rate/overflow drift feedback needs no device readback at all.
+    Semantics are pinned to `probe_and_compact` by tests."""
+    cache_ids = np.asarray(cache_ids)
+    tok = np.asarray(tok)
+    M = miss_capacity
+    if len(cache_ids):
+        slot = np.searchsorted(cache_ids, tok)
+        slot = np.clip(slot, 0, len(cache_ids) - 1).astype(np.int32)
+        hit = cache_ids[slot] == tok
+    else:
+        slot = np.zeros(len(tok), np.int32)
+        hit = np.zeros(len(tok), bool)
+    uniq = np.unique(tok[~hit])
+    n_miss = len(uniq)
+    buf = uniq[:M]
+    if len(buf):
+        pos = np.searchsorted(buf, tok)
+        pos = np.clip(pos, 0, len(buf) - 1).astype(np.int32)
+        found = buf[pos] == tok
+    else:
+        pos = np.zeros(len(tok), np.int32)
+        found = np.zeros(len(tok), bool)
+    buf_slot = np.where(~hit & found, pos, M).astype(np.int32)
+    overflow = ~hit & ~found
+    buf_ids = np.zeros(M, np.int32)
+    buf_ids[: len(buf)] = buf
+    return HostProbe(hit, slot, buf_ids, buf_slot, overflow, n_miss)
+
+
+def planned_serve_lookup(table, cache_rows, buf_ids, hit, cache_slot,
+                         buf_slot, *, n_shards: int = 1,
+                         kernel: bool = False):
+    """Device data path of the serving lookup, with the index stage
+    already done (`probe_host` at admission — intent means the host knows
+    the batch's miss set before the batch runs).  Only the (M+1, D)
+    compact buffer moves through the emulated vocab-parallel collective;
+    hits read the local replica cache; overflow slots read the all-zero
+    trash row (``buf_slot == M``) and their requests are re-queued by the
+    runtime, never served.  Returns (T, D) rows."""
+    D = table.shape[1]
+    buf_rows = shard_partial_sum(table, buf_ids, n_shards, kernel=kernel)
+    buffer = jnp.concatenate(
+        [buf_rows, jnp.zeros((1, D), buf_rows.dtype)])        # trash row M
+    return ops.pm_combine(hit, cache_slot, buf_slot, cache_rows, buffer,
+                          use_pallas=kernel)

@@ -42,6 +42,9 @@ class PlacementPlan:
     cache_ids: np.ndarray        # (C,) sorted int32, padded with V
     miss_capacity: int           # bucketed exact bound from intent
     window: tuple                # (start_step, end_step) the plan covers
+    predicted_miss_rate: float = 0.0   # expected per-access miss fraction
+    #   over the signaled window — the serving runtime's drift baseline
+    #   (observed miss rate far above it = the workload left the plan)
 
 
 def _bucket(n: int, floor: int = 64) -> int:
@@ -120,6 +123,52 @@ class IntentPlanner:
         return (np.concatenate(keys), np.concatenate(shards),
                 np.concatenate(steps))
 
+    def _build_plan(self, keys: np.ndarray, nodes: np.ndarray,
+                    steps: np.ndarray, window: tuple, *,
+                    cache_singles: bool = False) -> PlacementPlan:
+        """Shared §4.1 plan construction over flattened (keys, nodes,
+        steps) signals — used by the training-window `plan` and the online
+        `replan_from_queue` entry points.
+
+        ``cache_singles=False`` (training): only concurrent-intent keys
+        are replicated; single-shard keys stay on the owner/miss path.
+        ``cache_singles=True`` (serving): single-requester keys compete
+        for leftover cache capacity ranked by total demand — on a serving
+        node §4.1's *relocation* arm (single active node -> move the value
+        to it) degenerates to cache residency, because the requester IS
+        this node; concurrent keys still rank first."""
+        # §4.1 via the engine: concurrent intent -> replicate (weighted),
+        # single-node intent -> owner path
+        uniq, weight, single = concurrent_intent(keys, nodes, steps)
+        if cache_singles:
+            score = weight * (np.int64(np.max(single) + 1)
+                              if len(single) else 1) + single
+        else:
+            score = weight
+        multi = uniq[score > 0]
+        order = np.argsort(-score[score > 0], kind="stable")
+        hot = multi[order][: self.C].astype(np.int64)
+        cache_ids = np.full((self.C,), self.V, dtype=np.int32)
+        if len(hot):
+            cache_ids[: len(hot)] = hot.astype(np.int32)
+        cache_ids = np.sort(cache_ids)
+
+        # exact per-step unique-miss counts over the window -> capacity
+        # (per_node=False: the managed lookup dedups misses over the whole
+        # step's batch, so unique ids per step is the exact bound)
+        worst_miss = max(1, intent_miss_bound(keys, nodes, steps, hot,
+                                              per_node=False))
+        miss_rate = (float(np.mean(~np.isin(keys, hot)))
+                     if len(keys) else 0.0)
+        self._version += 1
+        return PlacementPlan(
+            version=self._version,
+            cache_ids=cache_ids,
+            miss_capacity=_bucket(worst_miss),
+            window=window,
+            predicted_miss_rate=miss_rate,
+        )
+
     def plan(self, current_step: int) -> PlacementPlan:
         """Build the plan for [current_step, current_step + lookahead)."""
         end = current_step + self.lookahead()
@@ -130,30 +179,28 @@ class IntentPlanner:
             end = max(current_step + 1,
                       min(end, max(self._intents) + 1))
         keys, shards, steps = self._window_signals(current_step, end)
-        # §4.1 via the engine: concurrent intent -> replicate (weighted),
-        # single-shard intent -> owner path
-        uniq, weight, _single = concurrent_intent(keys, shards, steps)
-        multi = uniq[weight > 0]
-        order = np.argsort(-weight[weight > 0], kind="stable")
-        hot = multi[order][: self.C].astype(np.int64)
-        cache_ids = np.full((self.C,), self.V, dtype=np.int32)
-        if len(hot):
-            cache_ids[: len(hot)] = hot.astype(np.int32)
-        cache_ids = np.sort(cache_ids)
-
-        # exact per-step unique-miss counts over the window -> capacity
-        # (per_node=False: the managed lookup dedups misses over the whole
-        # step's batch, so unique ids per step is the exact bound)
-        worst_miss = max(1, intent_miss_bound(keys, shards, steps, hot,
-                                              per_node=False))
-        self._version += 1
+        plan = self._build_plan(keys, shards, steps, (current_step, end))
         self._last_planned_step = current_step
-        return PlacementPlan(
-            version=self._version,
-            cache_ids=cache_ids,
-            miss_capacity=_bucket(worst_miss),
-            window=(current_step, end),
-        )
+        return plan
+
+    def replan_from_queue(self, keys: np.ndarray, slots: np.ndarray,
+                          ticks: np.ndarray) -> PlacementPlan:
+        """Online serving entry point (DESIGN.md §9): plan from the
+        *queued* — already-signaled — horizon instead of a fixed training
+        window.  The inputs are a `StreamingIntentBuffer.snapshot` of the
+        request queue: ``ticks`` are the micro-batches the scheduler will
+        form (the serving logical clock), ``slots`` are request positions
+        within a batch (the "nodes" of §4.1 — a key wanted by >= 2 queued
+        requests in the same batch is concurrent intent -> replicated;
+        leftover capacity goes to single-requester keys by demand — the
+        relocation arm lands on this node, see `_build_plan` — and
+        everything else rides the compact miss buffer, whose capacity is
+        the exact `intent_miss_bound` over the queued horizon)."""
+        keys = np.asarray(keys, np.int64)
+        end = int(ticks.max()) + 1 if len(keys) else 1
+        return self._build_plan(keys, np.asarray(slots, np.int64),
+                                np.asarray(ticks, np.int64), (0, end),
+                                cache_singles=True)
 
     def should_replan(self, current_step: int,
                       active: Optional[PlacementPlan]) -> bool:

@@ -1,0 +1,22 @@
+"""Online serving runtime: intent-signaled request scheduling over the
+managed embedding (DESIGN.md §9).
+
+    queue -> intent -> plan -> execute
+
+Requests signal intent for the rows they will touch at *enqueue* time;
+the planner re-plans the replica cache continuously from the queued
+horizon; batches execute through the read-only managed lookup; miss-rate
+and overflow feedback is the drift signal that triggers early replans.
+"""
+
+from repro.serve.requests import (DriftingZipfStream, ReplayStream,
+                                  RequestQueue, ServeRequest)
+from repro.serve.runtime import ServeConfig, ServeResult, ServingRuntime
+from repro.serve.scheduler import (LatencyRecorder, MicroBatch,
+                                   MicroBatchScheduler)
+
+__all__ = [
+    "DriftingZipfStream", "ReplayStream", "RequestQueue", "ServeRequest",
+    "ServeConfig", "ServeResult", "ServingRuntime",
+    "LatencyRecorder", "MicroBatch", "MicroBatchScheduler",
+]

@@ -120,6 +120,54 @@ def make_prefill_step(cfg: ModelConfig, *, last_only: bool = False,
     return prefill_step
 
 
+def make_prefill_decode_step(cfg: ModelConfig, *, fsdp_spec=None
+                             ) -> Callable:
+    """Fused prefill into a decode cache: one jit entry for the whole
+    prompt instead of a Python loop of P single-token serve steps (the
+    loop re-enters jit P times and dominates wall-clock at prompt lengths
+    of 64+ — examples/serve_decode.py, the serving runtime's decode side).
+
+    prefill_step(params, cache, tokens(B, P)) -> (last logits (B, V),
+    cache advanced by P).
+
+    Attention families run the prompt as ONE chunked forward (k/v for all
+    P positions written in one dynamic slice; `decode_attention` is
+    causal within the chunk).  Recurrent families (ssm/hybrid) keep the
+    per-token recurrence but move the loop *inside* jit as a `lax.scan`
+    over positions — same single compilation, state rides the carry.
+
+    Exact match with the token-by-token loop for every family except MoE
+    capacity dropping: the chunk routes the whole prompt through expert
+    capacity at once (the training-time semantics), where the loop routed
+    one token at a time.  The prompt must fit the KV cache (P <= cache
+    sequence length) — the same bound the loop already had.
+    """
+    chunked = cfg.family in ("dense", "moe", "vlm", "encdec")
+
+    def prefill_chunk(params, cache, tokens):
+        P = tokens.shape[1]
+        cache = {**cache, "len": cache["len"] + P}
+        logits, _, new_cache = forward(params, cfg, {"tokens": tokens},
+                                       cache=cache, remat=False,
+                                       fsdp_spec=fsdp_spec)
+        return logits[:, -1], new_cache
+
+    def prefill_scan(params, cache, tokens):
+        def body(cache, tok):
+            cache = {**cache, "len": cache["len"] + 1}
+            logits, _, cache = forward(params, cfg, {"tokens": tok},
+                                       cache=cache, remat=False,
+                                       fsdp_spec=fsdp_spec)
+            return cache, logits[:, -1]
+
+        # scan over positions: tokens (B, P) -> (P, B, 1) chunks
+        cache, logits = jax.lax.scan(
+            body, cache, jnp.swapaxes(tokens, 0, 1)[:, :, None])
+        return logits[-1], cache
+
+    return prefill_chunk if chunked else prefill_scan
+
+
 def make_serve_step(cfg: ModelConfig, *, fsdp_spec=None) -> Callable:
     """One decode step: consume one token per sequence against the cache.
 

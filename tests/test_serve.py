@@ -1,0 +1,407 @@
+"""Tests for the online serving runtime (DESIGN.md §9): streaming intent,
+queue/scheduler, serving-mode lookups, drift adaptation, overflow
+re-queueing, and the fused decode prefill."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import StreamingIntentBuffer
+from repro.kernels.pm_forward import probe_and_compact
+from repro.pm.embedding import (make_state, plain_lookup,
+                                plain_serve_lookup, planned_serve_lookup,
+                                probe_host, serve_lookup)
+from repro.pm.planner import IntentPlanner
+from repro.serve import (DriftingZipfStream, ReplayStream, RequestQueue,
+                         ServeConfig, ServeRequest, ServingRuntime)
+from repro.serve.scheduler import LatencyRecorder, MicroBatchScheduler
+
+V, D, C = 512, 16, 32
+
+
+def setup_state(seed=0, cache_ids=None):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(size=(V, D)), dtype=jnp.float32)
+    if cache_ids is None:
+        cache_ids = np.sort(rng.choice(V, size=C, replace=False))
+    cache_ids = jnp.asarray(cache_ids, dtype=jnp.int32)
+    return make_state(table, cache_ids), rng
+
+
+class TestStreamingIntent:
+    def test_ingest_expire_snapshot(self):
+        buf = StreamingIntentBuffer()
+        buf.ingest(10, [1, 2, 3])
+        buf.ingest(11, [2, 4])
+        buf.ingest(12, [5])
+        assert len(buf) == 6
+        buf.expire([11])
+        assert len(buf) == 4
+        keys, slots, ticks = buf.snapshot(np.array([10, 12]), batch_size=2)
+        # req 10 at position 0 (tick 0, slot 0); req 12 at position 1
+        assert sorted(keys[ticks == 0].tolist()) == [1, 2, 3, 5]
+        np.testing.assert_array_equal(slots[keys == 5], [1])
+
+    def test_snapshot_ticks_follow_queue_position(self):
+        buf = StreamingIntentBuffer()
+        for rid in range(6):
+            buf.ingest(rid, [100 + rid])
+        keys, slots, ticks = buf.snapshot(np.arange(6), batch_size=2)
+        order = np.argsort(keys)
+        np.testing.assert_array_equal(ticks[order], [0, 0, 1, 1, 2, 2])
+        np.testing.assert_array_equal(slots[order], [0, 1, 0, 1, 0, 1])
+
+    def test_in_flight_requests_dropped_from_snapshot(self):
+        buf = StreamingIntentBuffer()
+        buf.ingest(0, [7])
+        buf.ingest(1, [8])
+        keys, _, _ = buf.snapshot(np.array([1]), batch_size=4)
+        # req 0 was popped (in flight): only req 1's intent is planned
+        np.testing.assert_array_equal(np.sort(keys), [8])
+
+    def test_requeued_request_intent_still_live(self):
+        q = RequestQueue(StreamingIntentBuffer())
+        r = ServeRequest(0, np.array([3, 4]))
+        q.enqueue(r, 0.0)
+        popped = q.pop_batch(1)
+        assert len(q.intent) == 2          # popped but not served
+        q.requeue(popped)
+        assert popped[0].attempts == 1
+        q.served(popped)
+        assert len(q.intent) == 0
+
+
+class TestQueueScheduler:
+    def test_fifo_and_requeue_front(self):
+        q = RequestQueue()
+        reqs = [ServeRequest(i, np.array([i])) for i in range(4)]
+        q.enqueue_many(reqs, now=1.0)
+        first = q.pop_batch(2)
+        assert [r.rid for r in first] == [0, 1]
+        q.requeue(first)
+        assert q.order_ids().tolist() == [0, 1, 2, 3]
+
+    def test_fixed_shape_batches_pad_with_known_keys(self):
+        sched = MicroBatchScheduler(batch_requests=4, keys_per_request=3)
+        q = RequestQueue()
+        q.enqueue(ServeRequest(0, np.array([9, 8])), 0.0)
+        q.enqueue(ServeRequest(1, np.array([7, 6, 5])), 0.0)
+        batch = sched.admit(q)
+        assert batch.tokens.shape == (4, 3)
+        assert len(batch.reqs) == 2
+        # short request rows pad with their own first key; empty request
+        # slots clone row 0 — no key outside the signaled set appears
+        np.testing.assert_array_equal(batch.tokens[0], [9, 8, 9])
+        np.testing.assert_array_equal(batch.tokens[2], batch.tokens[0])
+
+    def test_overlong_request_rejected_loudly(self):
+        """Truncation would silently serve a partial request — the
+        scheduler must refuse instead."""
+        sched = MicroBatchScheduler(batch_requests=2, keys_per_request=3)
+        q = RequestQueue()
+        q.enqueue(ServeRequest(0, np.array([1, 2, 3, 4])), 0.0)
+        with pytest.raises(ValueError, match="keys_per_request"):
+            sched.admit(q)
+
+    def test_latency_recorder_percentiles(self):
+        rec = LatencyRecorder()
+        rec.extend([0.001 * i for i in range(1, 101)])
+        assert rec.percentile(50) == pytest.approx(0.0505, rel=1e-3)
+        s = rec.summary_ms()
+        assert s["count"] == 100
+        assert s["p99_ms"] > s["p50_ms"]
+
+
+class TestServeLookup:
+    def test_matches_plain_when_capacity_fits(self):
+        state, rng = setup_state()
+        tokens = jnp.asarray(rng.integers(0, V, size=(4, 6)), jnp.int32)
+        res = serve_lookup(state.table, state.cache_ids, state.cache_rows,
+                           tokens, 32)
+        exp = plain_lookup(state.table, tokens)
+        assert not bool(res.overflow.any())
+        np.testing.assert_allclose(np.asarray(res.out), np.asarray(exp),
+                                   rtol=1e-6)
+
+    def test_overflow_flagged_and_zeroed_never_silent(self):
+        """The serving analogue of strict mode: misses beyond capacity come
+        back as zeros WITH the overflow flag — the caller re-queues, the
+        lookup never silently falls back to a dense gather."""
+        state, rng = setup_state(cache_ids=np.arange(100, 100 + C))
+        tokens = jnp.asarray([[3, 5, 7, 9]], jnp.int32)   # 4 unique misses
+        res = serve_lookup(state.table, state.cache_ids, state.cache_rows,
+                           tokens, 2)
+        out = np.asarray(res.out)
+        over = np.asarray(res.overflow)
+        assert over.sum() == 2 and int(res.n_miss) == 4
+        np.testing.assert_allclose(out[over], 0.0)
+        exp = np.asarray(plain_lookup(state.table, tokens))
+        np.testing.assert_allclose(out[~over], exp[~over], rtol=1e-6)
+
+    def test_duplicates_share_one_slot(self):
+        """Serving analogue of TestMissDedup: duplicate missed keys share
+        one buffer slot, so capacity counts unique ids."""
+        state, rng = setup_state(cache_ids=np.arange(100, 100 + C))
+        tokens = jnp.asarray([[5, 5, 5, 7]], jnp.int32)
+        res = serve_lookup(state.table, state.cache_ids, state.cache_rows,
+                           tokens, 2)
+        assert not bool(res.overflow.any())
+        np.testing.assert_allclose(
+            np.asarray(res.out), np.asarray(plain_lookup(state.table,
+                                                         tokens)),
+            rtol=1e-6)
+
+    def test_shard_emulation_bitwise_neutral(self):
+        """The emulated vocab-parallel collective is a cost model, not a
+        semantics change: n_shards > 1 returns the exact same rows."""
+        state, rng = setup_state()
+        tokens = jnp.asarray(rng.integers(0, V, size=(3, 5)), jnp.int32)
+        r1 = serve_lookup(state.table, state.cache_ids, state.cache_rows,
+                          tokens, 16, n_shards=1)
+        r4 = serve_lookup(state.table, state.cache_ids, state.cache_rows,
+                          tokens, 16, n_shards=4)
+        np.testing.assert_array_equal(np.asarray(r1.out),
+                                      np.asarray(r4.out))
+        p1 = plain_serve_lookup(state.table, tokens, n_shards=1)
+        p4 = plain_serve_lookup(state.table, tokens, n_shards=4)
+        np.testing.assert_array_equal(np.asarray(p1), np.asarray(p4))
+
+    def test_probe_host_matches_device_probe(self):
+        """probe_host (admission-time numpy) is pinned to the device
+        probe_and_compact on every output."""
+        rng = np.random.default_rng(7)
+        for _ in range(10):
+            cache = np.sort(rng.choice(V, size=C, replace=False)) \
+                .astype(np.int32)
+            tok = rng.integers(0, V, size=37).astype(np.int32)
+            M = int(rng.choice([1, 2, 8, 64]))
+            hp = probe_host(cache, tok, M)
+            pc = probe_and_compact(jnp.asarray(cache), jnp.asarray(tok), M)
+            np.testing.assert_array_equal(hp.hit, np.asarray(pc.hit))
+            np.testing.assert_array_equal(hp.cache_slot,
+                                          np.asarray(pc.cache_slot))
+            np.testing.assert_array_equal(hp.buf_ids,
+                                          np.asarray(pc.buf_ids))
+            np.testing.assert_array_equal(hp.buf_slot,
+                                          np.asarray(pc.buf_slot))
+            np.testing.assert_array_equal(hp.overflow,
+                                          np.asarray(pc.overflow))
+            assert hp.n_miss == int(pc.n_miss)
+
+    def test_planned_lookup_matches_self_contained(self):
+        state, rng = setup_state()
+        tokens = rng.integers(0, V, size=(4, 6)).astype(np.int32)
+        hp = probe_host(np.asarray(state.cache_ids), tokens.reshape(-1), 16)
+        out = planned_serve_lookup(
+            state.table, state.cache_rows, jnp.asarray(hp.buf_ids),
+            jnp.asarray(hp.hit.astype(np.int32)),
+            jnp.asarray(hp.cache_slot), jnp.asarray(hp.buf_slot))
+        ref = serve_lookup(state.table, state.cache_ids, state.cache_rows,
+                           jnp.asarray(tokens), 16)
+        np.testing.assert_array_equal(
+            np.asarray(out).reshape(4, 6, D), np.asarray(ref.out))
+
+
+class TestReplanFromQueue:
+    def test_concurrent_keys_cached_and_bound_exact(self):
+        pl = IntentPlanner(vocab_size=1000, cache_capacity=4, n_shards=8)
+        buf = StreamingIntentBuffer()
+        # 8 queued requests, batch_size 4 -> 2 ticks; keys 1,2 wanted by
+        # every request (concurrent), 50+i unique per request
+        for i in range(8):
+            buf.ingest(i, [1, 2, 50 + i])
+        keys, slots, ticks = buf.snapshot(np.arange(8), batch_size=4)
+        plan = pl.replan_from_queue(keys, slots, ticks)
+        cached = set(int(i) for i in plan.cache_ids if i < 1000)
+        assert {1, 2} <= cached
+        # worst tick: 4 unique single-request keys miss (the 2 leftover
+        # cache slots hold two of the 8 singles)
+        assert plan.miss_capacity >= 2
+        assert 0.0 < plan.predicted_miss_rate < 1.0
+
+    def test_single_request_keys_fill_leftover_capacity(self):
+        """Serving ranks leftover capacity by demand (the relocation arm
+        lands on the serving node) — unlike the training plan."""
+        pl = IntentPlanner(vocab_size=1000, cache_capacity=8, n_shards=4)
+        buf = StreamingIntentBuffer()
+        buf.ingest(0, [1, 1, 1])          # hot but single-request
+        buf.ingest(1, [2])
+        keys, slots, ticks = buf.snapshot(np.arange(2), batch_size=4)
+        plan = pl.replan_from_queue(keys, slots, ticks)
+        cached = set(int(i) for i in plan.cache_ids if i < 1000)
+        assert {1, 2} <= cached
+
+
+def _run_runtime(scenario="rotate", rounds=60, zipf_a=1.2, seed=5,
+                 rotate_every=20, collect=False, **cfg_kw):
+    rng = np.random.default_rng(0)
+    table = rng.normal(size=(2048, 8)).astype(np.float32)
+    kw = dict(vocab=2048, batch_requests=16, keys_per_request=8,
+              cache_capacity=256, replan_every=6)
+    kw.update(cfg_kw)
+    cfg = ServeConfig(**kw)
+    stream = DriftingZipfStream(2048, kw["keys_per_request"],
+                                zipf_a=zipf_a,
+                                arrival_rate=kw["batch_requests"],
+                                scenario=scenario,
+                                rotate_every=rotate_every, seed=seed)
+    rt = ServingRuntime(table, cfg)
+    res = rt.run(stream, rounds, collect_outputs=collect)
+    return rt, stream, res, table
+
+
+class TestDriftAdaptation:
+    def test_miss_rate_recovers_within_one_replan_round(self):
+        """Seeded rotating hot set: after each rotation reaches the
+        scheduler, the first replan brings the miss rate back within 2x
+        of the pre-rotation steady state."""
+        rt, stream, res, _ = _run_runtime(rounds=64, rotate_every=20)
+        assert res.zero_served == 0
+        assert len(stream.rotation_rounds) >= 2
+        trace = dict(res.miss_trace)
+        checked = 0
+        for rot in stream.rotation_rounds:
+            if rot >= res.rounds - 4:
+                continue
+            pre = res.steady_miss_rate(rot - 6, rot)
+            assert pre is not None, f"no batches before rotation at {rot}"
+            replans = [r for r in res.replan_rounds if r >= rot]
+            assert replans, f"no replan after rotation at {rot}"
+            rr = replans[0]
+            # within one replan round of the rotation hitting the
+            # scheduler, served batches are back within 2x of steady
+            post = [trace[r] for r in range(rr + 1, min(rr + 5,
+                                                        res.rounds))
+                    if r in trace]
+            assert post, f"no served batches after replan {rr}"
+            assert float(np.mean(post)) <= 2.0 * max(pre, 0.02), \
+                f"rotation@{rot}: pre={pre:.3f} post={np.mean(post):.3f}"
+            checked += 1
+        assert checked >= 2
+
+    def test_steady_state_no_requeues(self):
+        _, _, res, _ = _run_runtime(scenario="steady", rounds=40)
+        assert res.requeues == 0
+        assert res.zero_served == 0
+        assert res.served == 40 * 16
+
+    def test_burst_and_flash_scenarios_serve_everything(self):
+        for scenario in ("burst", "flash"):
+            rt, stream, res, _ = _run_runtime(scenario=scenario, rounds=40)
+            assert res.zero_served == 0
+            # every admitted request is eventually served or still queued
+            assert res.served + len(rt.queue) == stream._next_rid
+
+
+class TestOverflowRequeue:
+    """Serving analogue of TestMissDedup: a request whose keys overflow
+    the planned miss buffer is re-queued and served exactly later —
+    never silently served zeros."""
+
+    def test_surprise_cold_keys_requeue_then_serve_exact(self):
+        rng = np.random.default_rng(0)
+        table = rng.normal(size=(2048, 8)).astype(np.float32)
+        # feedback-only replanning (replan_every=0) with the soft signal
+        # off: ONLY an overflow can trigger a replan, so the surprise
+        # wave must ride the requeue path
+        cfg = ServeConfig(vocab=2048, batch_requests=8,
+                          keys_per_request=16, cache_capacity=64,
+                          replan_every=0, drift_factor=1e9)
+
+        class SurpriseStream:
+            """Steady hot-set arrivals, then one wave of 128 cold unique
+            keys — far past the frozen plan's miss capacity."""
+
+            def __init__(self):
+                self.n = 0
+                self.by_rid = {}
+
+            def arrivals(self, rnd):
+                if rnd == 4:
+                    keys = [np.arange(1000 + 16 * i, 1016 + 16 * i)
+                            for i in range(8)]
+                else:
+                    keys = [np.arange(1, 17) for _ in range(8)]
+                out = []
+                for k in keys:
+                    req = ServeRequest(self.n, k)
+                    self.by_rid[self.n] = k
+                    self.n += 1
+                    out.append(req)
+                return out
+
+        stream = SurpriseStream()
+        rt = ServingRuntime(table, cfg)
+        res = rt.run(stream, rounds=14, warmup_backlog=1,
+                     collect_outputs=True)
+        assert res.requeues > 0, "surprise wave should overflow the plan"
+        assert res.overflow_batches > 0
+        assert res.zero_served == 0
+        # the overflow fed back into a replan that fit the cold keys
+        assert res.replans >= 2
+        # every surprise request was eventually served with exact rows
+        surprise_rids = [rid for rid, k in stream.by_rid.items()
+                         if k[0] >= 1000]
+        served_surprise = [rid for rid in surprise_rids
+                           if rid in res.outputs]
+        assert served_surprise, "surprise requests never served"
+        for rid in res.outputs:
+            np.testing.assert_allclose(
+                res.outputs[rid], table[stream.by_rid[rid]],
+                rtol=1e-6)
+
+    def test_collected_outputs_match_table_rows(self):
+        """End-to-end exactness under rotation: every served request got
+        exactly its table rows (the global never-serve-zeros check)."""
+        rng = np.random.default_rng(0)
+        table = rng.normal(size=(2048, 8)).astype(np.float32)
+        cfg = ServeConfig(vocab=2048, batch_requests=16,
+                          keys_per_request=8, cache_capacity=256,
+                          replan_every=6)
+        live = DriftingZipfStream(2048, 8, zipf_a=1.2, arrival_rate=16,
+                                  scenario="rotate", rotate_every=10,
+                                  seed=5)
+        replay = ReplayStream.record(live, 50)
+        rid_to_keys = {r.rid: r.keys for per in replay.per_round
+                       for r in per}
+        rt = ServingRuntime(table, cfg)
+        res = rt.run(replay, rounds=30, collect_outputs=True)
+        assert res.zero_served == 0
+        assert res.served > 300
+        for rid, rows in res.outputs.items():
+            np.testing.assert_allclose(rows, table[rid_to_keys[rid]],
+                                       rtol=1e-6)
+
+
+class TestFusedPrefill:
+    @pytest.mark.parametrize("arch", ["smollm-135m", "falcon-mamba-7b"])
+    def test_fused_prefill_matches_token_loop(self, arch):
+        from repro.configs.registry import get_config
+        from repro.data.batches import make_batch
+        from repro.models.model import init_cache, init_model
+        from repro.train.steps import (make_prefill_decode_step,
+                                       make_serve_step)
+        cfg = get_config(arch, smoke=True)
+        params = init_model(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        B, P = 2, 10
+        batch = make_batch(cfg, B, P, rng)
+        cache0 = init_cache(cfg, B, max_seq=P + 4)
+        serve = jax.jit(make_serve_step(cfg))
+        cache = dict(cache0)
+        for t in range(P):
+            logits_ref, cache = serve(params, cache,
+                                      batch["tokens"][:, t:t + 1])
+        prefill = jax.jit(make_prefill_decode_step(cfg))
+        logits, cache_f = prefill(params, dict(cache0), batch["tokens"])
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(logits_ref),
+                                   rtol=1e-4, atol=1e-4)
+        assert int(cache_f["len"]) == int(cache["len"])
+        # continuing decode from the fused cache matches the loop's cache
+        tok = jnp.argmax(logits_ref, axis=-1)[:, None].astype(jnp.int32)
+        l1, _ = serve(params, cache, tok)
+        l2, _ = serve(params, cache_f, tok)
+        np.testing.assert_allclose(np.asarray(l2), np.asarray(l1),
+                                   rtol=1e-4, atol=1e-4)
