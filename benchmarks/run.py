@@ -9,8 +9,12 @@ One module per paper table/figure (DESIGN.md §8):
   kernels_bench         — kernel micro-benches + TPU roofline bounds
   scale_sweep           — key-count scaling of the vectorized intent engine
   serve_bench           — online serving runtime vs plain lookup
-                          (throughput/latency + drift adaptation,
+                          (throughput/latency + drift adaptation +
+                          double-buffered-admission overlap,
                           BENCH_serve.json)
+  mesh_bench            — managed vs plain over the mesh-real shard_map
+                          psum path, 8-device host mesh (re-execs itself
+                          with XLA_FLAGS when needed, BENCH_mesh.json)
 
 Output: ``benchmark,variant,task,metric,value`` CSV rows on stdout and in
 ``benchmarks/results/benchmarks.csv``.  ``--quick`` additionally writes
@@ -37,6 +41,7 @@ _ALIASES = {
     "fig15_traces": "fig15",
     "kernels_bench": "kernels",
     "serve_bench": "serve",
+    "mesh_bench": "mesh",
 }
 
 
@@ -49,8 +54,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from . import (fig6_overall, fig7_scalability, fig8_timing,
-                   fig15_traces, kernels_bench, quality_mf, scale_sweep,
-                   serve_bench, table2_communication)
+                   fig15_traces, kernels_bench, mesh_bench, quality_mf,
+                   scale_sweep, serve_bench, table2_communication)
 
     scale = 0.2 if args.quick else 0.5
     benches = {
@@ -67,6 +72,7 @@ def main(argv=None):
         "quality_mf": quality_mf.run,
         "scale_sweep": lambda: scale_sweep.run(quick=args.quick),
         "serve": lambda: serve_bench.run(quick=args.quick),
+        "mesh": lambda: mesh_bench.run(quick=args.quick),
     }
     only = None
     if args.only:

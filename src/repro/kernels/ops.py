@@ -31,6 +31,17 @@ def embed_gather(table, ids, *, use_pallas: bool = True):
     return _gather_pallas(table, ids, interpret=not _on_tpu())
 
 
+def masked_embed_gather(table, ids, valid, *, use_pallas: bool = True):
+    """Gather with a validity mask: rows for ``ids`` where ``valid``,
+    zeros elsewhere.  The per-shard partial of the vocab-parallel
+    collectives (`pm.collectives`): each shard gathers its owned rows from
+    its local block (``ids`` already localized and clipped by the caller)
+    and the mask zeroes everything it does not own before the psum.  Also
+    serves the replica-cache refresh, where invalid ids are pad slots."""
+    rows = embed_gather(table, ids.astype(jnp.int32), use_pallas=use_pallas)
+    return jnp.where(valid[:, None], rows, 0.0)
+
+
 def adagrad_row_update(table, accum, ids, grads, *, lr=0.1, eps=1e-8,
                        use_pallas: bool = True):
     """Fused sparse AdaGrad row update; ids must be unique (see

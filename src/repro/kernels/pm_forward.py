@@ -29,13 +29,18 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .blocking import pick_block_d
 
-# any real token id is a vocab row index < 2**31 - 1
-_SENTINEL = jnp.int32(2 ** 31 - 1)
+# any real token id is a vocab row index < 2**31 - 1.  numpy scalar on
+# purpose: a module-level jnp constant would create a device array at
+# import time and freeze the backend's device count before test/launch
+# entry points get to set XLA_FLAGS (e.g. the forced host-device counts
+# of tests/test_dryrun.py and the mesh CI job).
+_SENTINEL = np.int32(2 ** 31 - 1)
 
 
 class ProbeCompact(NamedTuple):

@@ -9,6 +9,7 @@ Functions only — importing this module never touches jax device state.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,6 +21,21 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Degenerate 1x1 mesh for CPU smoke runs."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_model_mesh(n_shards: int = 0):
+    """1-D ``("model",)`` mesh over the first ``n_shards`` local devices
+    (0 = all) — the vocab-parallel mesh of the collective backend
+    (`repro.pm.collectives.MeshBackend`).  On CPU hosts,
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` provides the
+    multi-device substrate CI exercises the real psum path on."""
+    devs = jax.devices()
+    n = n_shards or len(devs)
+    if len(devs) < n:
+        raise ValueError(
+            f"mesh needs {n} devices, host has {len(devs)} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return jax.sharding.Mesh(np.asarray(devs[:n]), ("model",))
 
 
 def batch_axes(mesh) -> tuple:

@@ -29,6 +29,14 @@ def _fits(dim: int, size: int) -> bool:
     return size > 1 and dim % size == 0
 
 
+def managed_table_sharding(mesh, axis: str = "model") -> jax.NamedSharding:
+    """Placement of the intent-managed embedding table for a collective
+    backend mesh: vocab-sharded over ``axis`` (every row has one owner
+    shard — the allocation of DESIGN.md §3b), feature dim replicated.
+    `device_put` target for `pm.collectives.MeshBackend` callers."""
+    return jax.NamedSharding(mesh, P(axis, None))
+
+
 def _roles_for(name: str, shape, in_moe: bool, cfg: ModelConfig):
     """Role per dimension of the (unstacked) leaf."""
     nd = len(shape)

@@ -427,7 +427,7 @@ def forward(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
             cache: Optional[Params] = None, remat: bool = True,
             remat_policy: str = "full",
             pm_miss_capacity: int = 0, pm_strict: bool = False,
-            pm_kernel: bool = False,
+            pm_kernel: bool = False, pm_backend=None,
             head_last_only: bool = False, skip_head: bool = False,
             fsdp_spec=None, act_spec=None):
     """Returns (logits, aux_loss, new_cache).
@@ -446,7 +446,7 @@ def forward(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
         from repro.pm.embedding import pm_lookup
         h = pm_lookup(params["embed"], batch["pm_cache_ids"],
                       batch["pm_cache_rows"], tokens, pm_miss_capacity,
-                      pm_strict, pm_kernel)
+                      pm_strict, pm_kernel, pm_backend)
     else:
         h = jnp.take(params["embed"], tokens, axis=0)
     if cfg.family == "vlm" and "img_embeds" in batch:

@@ -1,0 +1,237 @@
+"""Collective backends: the vocab-parallel communication layer of the
+intent-managed embedding (DESIGN.md §10).
+
+The managed lookup's perf claim is about what moves through the network:
+only the compact ``(M+1, D)`` miss buffer instead of every token's row.
+This module isolates *how* that movement happens behind a small backend
+protocol so the lookup data path (`pm.embedding`) is written once and the
+collective substrate is swappable:
+
+  `EmulatedBackend`
+      The single-device reference.  ``n_shards > 1`` materializes one
+      owner-masked ``(n, D)`` partial per shard behind
+      `lax.optimization_barrier` — the cost model that stands in for the
+      all-reduce's wire bytes on a one-device host (the seed repo's
+      ``shard_partial_sum``).  ``n_shards == 1`` degenerates to a plain
+      (optionally Pallas-blocked) gather, which is the training default.
+
+  `MeshBackend`
+      The real thing: the table is sharded ``P(axis, None)`` over a JAX
+      device mesh and every data movement is an explicit `shard_map`
+      collective —
+
+        gather_rows       masked partial gather per shard + `lax.psum`
+                          of the ``(n, D)`` buffer (each shard contributes
+                          the rows it owns, zeros elsewhere);
+        scatter_row_grads tokens are chunked over shards, each shard
+                          scatter-adds its chunk's row gradients into a
+                          local ``(V, D)`` partial, and one tiled
+                          `lax.psum_scatter` routes the summed rows to
+                          their owner shard's ``(V/n, D)`` block;
+        refresh_rows      the replica-sync grouped all-gather: one masked
+                          psum over the ``(C, D)`` hot-row set (pad ids
+                          ``>= V`` belong to no shard and come back zero).
+
+      Runs on any multi-device backend; CI exercises it on CPU via
+      ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+Backends are frozen dataclasses (hashable) so they ride through
+`jax.custom_vjp` nondiff args and `jax.jit` static closures without
+recompilation churn.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+try:  # jax >= 0.6
+    from jax.experimental.shard_map import shard_map
+except ImportError:  # pragma: no cover
+    from jax.shard_map import shard_map  # type: ignore
+
+from repro.kernels import ops
+
+
+@dataclass(frozen=True)
+class EmulatedBackend:
+    """Single-host stand-in for the vocab-parallel collectives.
+
+    With ``n_shards > 1`` each gather materializes one owner-masked
+    ``(n, D)`` partial per shard behind `lax.optimization_barrier` so XLA
+    cannot algebraically fuse the mask-and-sum back into a plain gather:
+    every shard's message is a real ``(n, D)`` buffer, the cost model for
+    its wire bytes (proportional to ``n_shards * len(ids) * D`` — exactly
+    the lever the managed path pulls by routing only the compact miss
+    buffer through it)."""
+
+    n_shards: int = 1
+    mesh_real: bool = field(default=False, init=False)
+
+    def gather_rows(self, table, ids, *, kernel: bool = False):
+        """Rows for ``ids`` through the emulated collective."""
+        ids = ids.astype(jnp.int32)
+        rows = ops.embed_gather(table, ids, use_pallas=kernel) if kernel \
+            else jnp.take(table, ids, axis=0)
+        if self.n_shards <= 1:
+            return rows
+        V = table.shape[0]
+        block = -(-V // self.n_shards)
+        owner = ids // block
+        partial = jnp.zeros_like(rows)
+        for s in range(self.n_shards):
+            msg = jnp.where((owner == s)[:, None], rows, 0.0)
+            partial = partial + jax.lax.optimization_barrier(msg)
+        return partial
+
+    def scatter_row_grads(self, tok, g, vocab_size: int, *,
+                          kernel: bool = False):
+        """Route all row gradients to the (conceptually owner-sharded)
+        table: dense scatter-add, or — ``kernel`` — duplicate pre-sum into
+        compact slots followed by one blocked Pallas scatter (pad slots hit
+        the sentinel trash row V)."""
+        V = vocab_size
+        if not kernel:
+            return jnp.zeros((V, g.shape[1]), dtype=g.dtype).at[tok].add(g)
+        slot_ids, slot_g = ops.segment_rows(tok, g, n_slots=tok.shape[0],
+                                            pad_id=V)
+        base = jnp.zeros((V + 1, g.shape[1]), dtype=g.dtype)
+        return ops.scatter_rows(base, slot_ids, slot_g)[:V]
+
+    def refresh_rows(self, table, cache_ids):
+        """Replica sync: gather the hot rows (pad ids >= V read zeros).
+        Eager-friendly op-by-op — the XLA CPU backend lowers a jitted
+        clip+gather+mask into a far slower fused gather."""
+        V = table.shape[0]
+        ids = cache_ids.astype(jnp.int32)
+        return ops.masked_embed_gather(table, jnp.clip(ids, 0, V - 1),
+                                       ids < V, use_pallas=False)
+
+
+@dataclass(frozen=True)
+class MeshBackend:
+    """Real SPMD collectives over a device mesh: the table lives sharded
+    ``P(axis, None)`` (contiguous vocab blocks, shard k owns rows
+    ``[k*V/n, (k+1)*V/n)``) and `shard_map` makes every transfer an
+    explicit psum / psum_scatter.  Requires ``V % n_shards == 0`` (the
+    same divisibility `models.losses.vocab_parallel_ce` asserts).
+
+    ``check_rep=False`` on the shard_maps: the Pallas gather kernel has no
+    replication rule, and the outputs' replication is structural (psum ->
+    replicated, psum_scatter -> sharded by construction)."""
+
+    mesh: jax.sharding.Mesh
+    axis: str = "model"
+    mesh_real: bool = field(default=True, init=False)
+
+    @property
+    def n_shards(self) -> int:
+        return self.mesh.shape[self.axis]
+
+    def place_table(self, table):
+        """Owner-shard the table over the mesh (the §3b allocation) via
+        `launch.sharding.managed_table_sharding`."""
+        from repro.launch.sharding import managed_table_sharding
+        return jax.device_put(table,
+                              managed_table_sharding(self.mesh, self.axis))
+
+    def _check(self, V: int) -> int:
+        n = self.n_shards
+        if V % n:
+            raise ValueError(
+                f"vocab {V} must divide the {self.axis!r} axis ({n})")
+        return V // n
+
+    def gather_rows(self, table, ids, *, kernel: bool = False):
+        """Masked partial gather per shard + psum of the compact buffer:
+        each shard gathers the rows it owns (zeros elsewhere) from its
+        local ``(V/n, D)`` block — Pallas-blocked when ``kernel`` — and
+        one `lax.psum` moves the summed ``(n, D)`` buffer to every shard.
+        Ids outside every block (e.g. cache pad V) come back zero."""
+        V = table.shape[0]
+        block = self._check(V)
+
+        def f(tblk, ids):
+            lo = jax.lax.axis_index(self.axis) * block
+            local = ids.astype(jnp.int32) - lo
+            inb = (local >= 0) & (local < block)
+            rows = ops.masked_embed_gather(
+                tblk, jnp.clip(local, 0, block - 1), inb, use_pallas=kernel)
+            return jax.lax.psum(rows, self.axis)
+
+        return shard_map(
+            f, mesh=self.mesh,
+            in_specs=(P(self.axis, None), P(None)), out_specs=P(None),
+            check_rep=False)(table, ids)
+
+    def scatter_row_grads(self, tok, g, vocab_size: int, *,
+                          kernel: bool = False):
+        """psum_scatter-routed row gradients: tokens are chunked over the
+        mesh axis, each shard scatter-adds its chunk into a local ``(V, D)``
+        partial — with ``kernel``, duplicates are pre-summed into compact
+        slots by `segment_rows` first — and one tiled `lax.psum_scatter`
+        both sums the partials and delivers each owner shard exactly its
+        ``(V/n, D)`` block (n-fold less wire than a psum of the full
+        gradient).  Pad/chunk-pad tokens carry id V and are dropped."""
+        V = vocab_size
+        n = self.n_shards
+        self._check(V)
+        D = g.shape[1]
+        T = tok.shape[0]
+        cap = -(-T // n)
+        pad = n * cap - T
+        tokp = jnp.concatenate(
+            [tok.astype(jnp.int32), jnp.full((pad,), V, jnp.int32)])
+        gp = jnp.concatenate([g, jnp.zeros((pad, D), g.dtype)])
+
+        def f(tokp, gp):
+            i = jax.lax.axis_index(self.axis)
+            tc = jax.lax.dynamic_slice_in_dim(tokp, i * cap, cap)
+            gc = jax.lax.dynamic_slice_in_dim(gp, i * cap, cap, axis=0)
+            if kernel:
+                tc, gc = ops.segment_rows(tc, gc, n_slots=cap, pad_id=V)
+                gc = gc.astype(gp.dtype)
+            partial = jnp.zeros((V, D), gp.dtype).at[tc].add(gc,
+                                                             mode="drop")
+            return jax.lax.psum_scatter(partial, self.axis,
+                                        scatter_dimension=0, tiled=True)
+
+        return shard_map(
+            f, mesh=self.mesh, in_specs=(P(None), P(None)),
+            out_specs=P(self.axis, None), check_rep=False)(tokp, gp)
+
+    def refresh_rows(self, table, cache_ids):
+        """Replica sync round: the grouped all-gather of the plan's hot
+        rows, lowered as one owner-masked psum over ``(C, D)`` (each shard
+        contributes its owned hot rows; pad ids >= V belong to no shard
+        and come back zero — exactly the padded-cache contract)."""
+        return self.gather_rows(table, cache_ids)
+
+
+#: module-level default: the training path's single-device reference.
+EMULATED = EmulatedBackend(1)
+
+
+def resolve(backend, n_shards: int = 1):
+    """``backend`` if given, else the emulated backend at ``n_shards`` —
+    the rule every `pm.embedding` entry point applies to its arguments."""
+    if backend is not None:
+        return backend
+    return EMULATED if n_shards <= 1 else EmulatedBackend(n_shards)
+
+
+def make_backend(collective: str, model_shards: int = 0):
+    """Config-string entry point shared by the training loop and the
+    serving runtime: ``"emulated"`` -> None (the per-call `resolve`
+    default), ``"mesh"`` -> a `MeshBackend` over the first
+    ``model_shards`` local devices (0 = all, `launch.mesh.
+    make_model_mesh`).  Callers owning a table should `place_table` it."""
+    if collective == "emulated":
+        return None
+    if collective == "mesh":
+        from repro.launch.mesh import make_model_mesh
+        return MeshBackend(make_model_mesh(model_shards))
+    raise ValueError(f"unknown collective {collective!r}")

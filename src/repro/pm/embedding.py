@@ -14,16 +14,27 @@ paths:
          by one masked-partial-sum all-reduce over (M, D) instead of the
          dense (B*S, D) all-reduce of plain vocab-parallel embedding.
 
+Every lookup variant here — the training VJP (`pm_lookup`), the serving
+read-only probe-on-device (`serve_lookup`) and probe-at-admission
+(`planned_serve_lookup`) modes, and the unmanaged baselines — is a thin
+wrapper over ONE shared data path (`combine_miss_buffer`), parameterized
+by a collective backend (`pm.collectives`): `EmulatedBackend` materializes
+the owner-masked partials on a single device (the barrier cost model),
+`MeshBackend` runs the real `shard_map` psum over a multi-device mesh
+(DESIGN.md §10).
+
 ``kernel=True`` runs the row data-path through the Pallas kernels
 (DESIGN.md §3c): blocked miss-buffer gather + scalar-prefetched per-token
 combine forward, compact row scatter backward.
 
 Replica synchronization: gradients NEVER flow into the cache (replicas are
 not independent parameters).  A custom VJP routes all row gradients to the
-owner-sharded table; the cache is re-gathered from the table once per
-refresh round (`refresh_cache`), which in the synchronous SPMD mapping
-bounds replica staleness to one round — refresh-after-update gives exact
-equivalence with an unmanaged embedding (tested).
+owner-sharded table (`backend.scatter_row_grads` — a psum_scatter on the
+mesh); the cache is re-gathered from the table once per refresh round
+(`refresh_cache`, the backend's grouped all-gather), which in the
+synchronous SPMD mapping bounds replica staleness to one round —
+refresh-after-update gives exact equivalence with an unmanaged embedding
+(tested).
 """
 
 from __future__ import annotations
@@ -37,6 +48,7 @@ import numpy as np
 
 from repro.kernels import ops
 from repro.kernels.pm_forward import probe_and_compact
+from repro.pm.collectives import resolve
 
 
 class EmbedPMState(NamedTuple):
@@ -47,28 +59,44 @@ class EmbedPMState(NamedTuple):
     cache_rows: jnp.ndarray  # (C, D), replicated
 
 
-def make_state(table: jnp.ndarray, cache_ids: jnp.ndarray) -> EmbedPMState:
+def make_state(table: jnp.ndarray, cache_ids: jnp.ndarray,
+               backend=None) -> EmbedPMState:
     """Build state with a freshly synchronized cache.  ``cache_ids`` must be
-    sorted ascending; pad slots use V (matches no token)."""
-    cache_rows = jnp.take(table, jnp.clip(cache_ids, 0, table.shape[0] - 1),
-                          axis=0)
-    pad = (cache_ids >= table.shape[0])[:, None]
-    cache_rows = jnp.where(pad, 0.0, cache_rows)
-    return EmbedPMState(table, cache_ids.astype(jnp.int32), cache_rows)
+    sorted ascending; pad slots use V (matches no token).  ``backend``
+    picks the collective that gathers the hot rows (the mesh backend's
+    grouped all-gather; emulated/None reads locally)."""
+    cache_ids = cache_ids.astype(jnp.int32)
+    cache_rows = resolve(backend).refresh_rows(table, cache_ids)
+    return EmbedPMState(table, cache_ids, cache_rows)
 
 
-def refresh_cache(state: EmbedPMState,
-                  cache_ids: jnp.ndarray | None = None) -> EmbedPMState:
+def refresh_cache(state: EmbedPMState, cache_ids: jnp.ndarray | None = None,
+                  backend=None) -> EmbedPMState:
     """Replica sync round: re-gather the hot rows from their owners (one
-    grouped all-gather on TPU).  Optionally installs a new plan's ids."""
+    grouped all-gather on the mesh backend).  Optionally installs a new
+    plan's ids."""
     ids = state.cache_ids if cache_ids is None else cache_ids
-    return make_state(state.table, ids)
+    return make_state(state.table, ids, backend)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def combine_miss_buffer(backend, table, cache_rows, hit, cache_slot,
+                        buf_ids, buf_slot, *, kernel: bool = False):
+    """THE shared managed-lookup data path (all variants funnel here):
+    move the compact unique-miss buffer through the backend's
+    vocab-parallel collective, append the all-zero trash row (slot M —
+    overflow tokens land there), and per-token combine: hits read the
+    local replica cache, misses read the buffer.  Returns (T, D) rows."""
+    buf_rows = resolve(backend).gather_rows(table, buf_ids, kernel=kernel)
+    buffer = jnp.concatenate(
+        [buf_rows, jnp.zeros((1, table.shape[1]), buf_rows.dtype)])
+    return ops.pm_combine(hit, cache_slot, buf_slot, cache_rows, buffer,
+                          use_pallas=kernel)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
 def pm_lookup(table, cache_ids, cache_rows, tokens, miss_capacity: int,
-              strict: bool = False, kernel: bool = False):
-    """Intent-managed embedding lookup.
+              strict: bool = False, kernel: bool = False, backend=None):
+    """Intent-managed embedding lookup (training mode, differentiable).
 
     table (V, D); cache_ids (C,) sorted; cache_rows (C, D); tokens (B, S).
     ``miss_capacity``: static bound on cache-miss tokens per call — the
@@ -80,67 +108,57 @@ def pm_lookup(table, cache_ids, cache_rows, tokens, miss_capacity: int,
     requirement.  ``kernel=True`` routes the row data-path through the
     Pallas kernels (`repro.kernels`: blocked miss-buffer gather + per-token
     combine forward, blocked row scatter backward); the default jnp path is
-    the bitwise reference.
+    the bitwise reference.  ``backend`` selects the collective substrate
+    (`pm.collectives`; None = single-device emulated reference).
     """
     out, _ = _pm_lookup_fwd(table, cache_ids, cache_rows, tokens,
-                            miss_capacity, strict, kernel)
+                            miss_capacity, strict, kernel, backend)
     return out
 
 
 def _lookup_impl(table, cache_ids, cache_rows, tokens, miss_capacity,
-                 strict=False, kernel=False):
+                 strict=False, kernel=False, backend=None):
     B, S = tokens.shape
     T = B * S
     M = min(miss_capacity, T)
-    D = table.shape[1]
     tok = tokens.reshape(T).astype(jnp.int32)
     # probe + dedup/compact: UNIQUE missed ids fill the M intent-planned
     # slots (duplicates share a slot, matching `intent_miss_bound`)
     pc = probe_and_compact(cache_ids, tok, M)
-
-    # blocked gather of the compact miss buffer (on TPU: the (M+1, D)
-    # buffer is what the masked partial-sum all-reduce moves) + per-token
-    # combine — Pallas kernels when ``kernel``, their jnp oracles otherwise
-    buf_rows = ops.embed_gather(table, pc.buf_ids, use_pallas=kernel)
-    buffer = jnp.concatenate(
-        [buf_rows, jnp.zeros((1, D), buf_rows.dtype)])        # trash row M
-    out = ops.pm_combine(pc.hit, pc.cache_slot, pc.buf_slot,
-                         cache_rows, buffer, use_pallas=kernel)
+    out = combine_miss_buffer(backend, table, cache_rows, pc.hit,
+                              pc.cache_slot, pc.buf_ids, pc.buf_slot,
+                              kernel=kernel)
 
     def with_overflow(o):
-        dense = jnp.take(table, tok, axis=0)
+        dense = resolve(backend).gather_rows(table, tok)
         return jnp.where(pc.overflow[:, None], dense, o)
 
     if not strict:
-        # rare overflow: correctness fallback via a direct (dense) gather.
-        # ``strict=True`` (dry-run / planner-guaranteed capacity) omits the
-        # branch entirely so no conditional dense collective is lowered.
+        # rare overflow: correctness fallback via a direct (dense) gather
+        # through the same collective backend.  ``strict=True`` (dry-run /
+        # planner-guaranteed capacity) omits the branch entirely so no
+        # conditional dense collective is lowered.
         out = jax.lax.cond(pc.n_miss > M, with_overflow, lambda o: o, out)
-    return out.reshape(B, S, D)
+    return out.reshape(B, S, table.shape[1])
 
 
 def _pm_lookup_fwd(table, cache_ids, cache_rows, tokens, miss_capacity,
-                   strict=False, kernel=False):
+                   strict=False, kernel=False, backend=None):
     out = _lookup_impl(table, cache_ids, cache_rows, tokens, miss_capacity,
-                       strict, kernel)
+                       strict, kernel, backend)
     return out, (tokens, table.shape)
 
 
-def _pm_lookup_bwd(miss_capacity, strict, kernel, res, g):
+def _pm_lookup_bwd(miss_capacity, strict, kernel, backend, res, g):
     tokens, (V, D) = res
     B, S = tokens.shape
     tok = tokens.reshape(B * S).astype(jnp.int32)
     gt = g.reshape(B * S, D)
     # replica write-back: ALL row gradients go to the owner-sharded table
-    if kernel:
-        # pre-sum duplicates into compact slots (pad -> trash row V), then
-        # one blocked scatter into the donated zero gradient buffer
-        slot_ids, slot_g = ops.segment_rows(tok, gt, n_slots=B * S,
-                                            pad_id=V)
-        base = jnp.zeros((V + 1, D), dtype=gt.dtype)
-        grad_table = ops.scatter_rows(base, slot_ids, slot_g)[:V]
-    else:
-        grad_table = jnp.zeros((V, D), dtype=gt.dtype).at[tok].add(gt)
+    # (on the mesh backend a psum_scatter routes each summed row to its
+    # owner's block; emulated = the dense/kernel scatter reference)
+    grad_table = resolve(backend).scatter_row_grads(tok, gt, V,
+                                                    kernel=kernel)
     return (grad_table, None, None, None)
 
 
@@ -165,53 +183,31 @@ class ServeLookupResult(NamedTuple):
 
 
 def shard_partial_sum(table, ids, n_shards: int, *, kernel: bool = False):
-    """Vocab-parallel gather emulation: with the table sharded into
-    ``n_shards`` contiguous vocab blocks, each shard gathers the rows it
-    owns (zeros elsewhere) and the results are summed — the masked
-    partial-sum all-reduce a TPU pays, materialized as n_shards masked
-    (n, D) buffers on this single-device backend.  Each partial passes
-    through `lax.optimization_barrier` so XLA cannot algebraically fuse
-    the mask-and-sum back into a plain gather: every shard's message is a
-    real (n, D) materialization, the single-host stand-in for its wire
-    bytes.  That cost is proportional to ``n_shards * len(ids) * D``,
-    which is exactly the lever the managed serving path pulls: it routes
-    only the compact miss buffer (M ids) through this collective instead
-    of every token."""
-    rows = ops.embed_gather(table, ids.astype(jnp.int32),
-                            use_pallas=kernel) if kernel \
-        else jnp.take(table, ids.astype(jnp.int32), axis=0)
-    if n_shards <= 1:
-        return rows
-    V = table.shape[0]
-    block = -(-V // n_shards)
-    owner = ids.astype(jnp.int32) // block
-    partial = jnp.zeros_like(rows)
-    for s in range(n_shards):
-        msg = jnp.where((owner == s)[:, None], rows, 0.0)
-        partial = partial + jax.lax.optimization_barrier(msg)
-    return partial
+    """Back-compat alias: the emulated vocab-parallel gather — see
+    `pm.collectives.EmulatedBackend.gather_rows` for the cost-model
+    semantics (one barrier-materialized owner-masked partial per shard)."""
+    return resolve(None, n_shards).gather_rows(table, ids, kernel=kernel)
 
 
-def plain_serve_lookup(table, tokens, *, n_shards: int = 1):
+def plain_serve_lookup(table, tokens, *, n_shards: int = 1, backend=None):
     """Unmanaged serving baseline: every token's row moves through the
     vocab-parallel collective (the dense (T, D) partial-sum)."""
     B, K = tokens.shape
     tok = tokens.reshape(B * K)
-    out = shard_partial_sum(table, tok, n_shards)
+    out = resolve(backend, n_shards).gather_rows(table, tok)
     return out.reshape(B, K, -1)
 
 
 def serve_lookup(table, cache_ids, cache_rows, tokens, miss_capacity: int,
-                 *, n_shards: int = 1,
-                 kernel: bool = False) -> ServeLookupResult:
+                 *, n_shards: int = 1, kernel: bool = False,
+                 backend=None) -> ServeLookupResult:
     """Serving-mode managed lookup: read-only (no VJP, no optimizer), and
     it NEVER falls back to a dense gather silently — misses beyond the
     planned capacity come back as zeros with their ``overflow`` flag set,
     and the runtime re-queues those requests (the request is served late,
     never wrong).  Hits read the local replica cache (no collective);
     unique misses are compacted into the intent-sized buffer and only that
-    (M+1, D) buffer moves through the emulated vocab-parallel collective
-    (`shard_partial_sum`).
+    (M+1, D) buffer moves through the backend's vocab-parallel collective.
     """
     B, K = tokens.shape
     T = B * K
@@ -219,11 +215,9 @@ def serve_lookup(table, cache_ids, cache_rows, tokens, miss_capacity: int,
     D = table.shape[1]
     tok = tokens.reshape(T).astype(jnp.int32)
     pc = probe_and_compact(cache_ids, tok, M)
-    buf_rows = shard_partial_sum(table, pc.buf_ids, n_shards, kernel=kernel)
-    buffer = jnp.concatenate(
-        [buf_rows, jnp.zeros((1, D), buf_rows.dtype)])        # trash row M
-    out = ops.pm_combine(pc.hit, pc.cache_slot, pc.buf_slot,
-                         cache_rows, buffer, use_pallas=kernel)
+    out = combine_miss_buffer(resolve(backend, n_shards), table, cache_rows,
+                              pc.hit, pc.cache_slot, pc.buf_ids,
+                              pc.buf_slot, kernel=kernel)
     # overflow tokens route to the trash row -> zeros; make that explicit
     # (a planned buf id of 0 must not leak row 0 into an overflow slot)
     out = jnp.where(pc.overflow[:, None], 0.0, out)
@@ -286,17 +280,14 @@ def probe_host(cache_ids, tok, miss_capacity: int) -> HostProbe:
 
 def planned_serve_lookup(table, cache_rows, buf_ids, hit, cache_slot,
                          buf_slot, *, n_shards: int = 1,
-                         kernel: bool = False):
+                         kernel: bool = False, backend=None):
     """Device data path of the serving lookup, with the index stage
     already done (`probe_host` at admission — intent means the host knows
     the batch's miss set before the batch runs).  Only the (M+1, D)
-    compact buffer moves through the emulated vocab-parallel collective;
+    compact buffer moves through the backend's vocab-parallel collective;
     hits read the local replica cache; overflow slots read the all-zero
     trash row (``buf_slot == M``) and their requests are re-queued by the
     runtime, never served.  Returns (T, D) rows."""
-    D = table.shape[1]
-    buf_rows = shard_partial_sum(table, buf_ids, n_shards, kernel=kernel)
-    buffer = jnp.concatenate(
-        [buf_rows, jnp.zeros((1, D), buf_rows.dtype)])        # trash row M
-    return ops.pm_combine(hit, cache_slot, buf_slot, cache_rows, buffer,
-                          use_pallas=kernel)
+    return combine_miss_buffer(resolve(backend, n_shards), table,
+                               cache_rows, hit, cache_slot, buf_ids,
+                               buf_slot, kernel=kernel)

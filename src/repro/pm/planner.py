@@ -60,11 +60,21 @@ class IntentPlanner:
 
     def __init__(self, vocab_size: int, cache_capacity: int,
                  n_shards: int, plan_every: int = 8,
+                 per_node_bound: bool = False,
                  alpha: float = 0.1, p: float = 0.9999, lam0: float = 10.0):
         self.V = vocab_size
         self.C = cache_capacity
         self.n_shards = n_shards
         self.plan_every = plan_every
+        # miss-capacity scope, threaded from the collective backend
+        # (DESIGN.md §10): False sizes the buffer by the worst per-step
+        # GLOBAL unique-miss count (the emulated single-buffer lookup);
+        # True sizes it per signaling shard (`intent_miss_bound(
+        # per_node=True)`) — the mesh backend's per-shard capacity, where
+        # each data shard compacts its own misses.  With one data shard
+        # the two bounds coincide; multi-shard mesh configs stay correct
+        # through the lookup's non-strict dense fallback.
+        self.per_node_bound = per_node_bound
         self.timer = ActionTimer(alpha=alpha, p=p, lam0=lam0)
         # step -> list over shards of id arrays (the intent signal buffer;
         # decisions over it are made by the engine classifiers)
@@ -153,11 +163,14 @@ class IntentPlanner:
             cache_ids[: len(hot)] = hot.astype(np.int32)
         cache_ids = np.sort(cache_ids)
 
-        # exact per-step unique-miss counts over the window -> capacity
+        # exact per-step miss counts over the window -> capacity
         # (per_node=False: the managed lookup dedups misses over the whole
-        # step's batch, so unique ids per step is the exact bound)
-        worst_miss = max(1, intent_miss_bound(keys, nodes, steps, hot,
-                                              per_node=False))
+        # step's batch, so unique ids per step is the exact bound;
+        # per_node=True: per-shard capacity for the mesh backend — the
+        # loader signals unique ids per shard, so per-(step, shard)
+        # counts are per-shard unique counts)
+        worst_miss = max(1, intent_miss_bound(
+            keys, nodes, steps, hot, per_node=self.per_node_bound))
         miss_rate = (float(np.mean(~np.isin(keys, hot)))
                      if len(keys) else 0.0)
         self._version += 1

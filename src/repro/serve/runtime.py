@@ -5,8 +5,9 @@ requests have already signaled intent for the rows they will touch
 (`RequestQueue.enqueue` -> `StreamingIntentBuffer`), the planner
 continuously re-plans the replica cache from that streaming intent
 (`IntentPlanner.replan_from_queue` over the queued horizon), and batches
-execute through the read-only `serve_lookup` — jnp or Pallas-backed
-(`ServeConfig.kernel`), no VJP, no optimizer.
+execute through the read-only serving data path — jnp or Pallas-backed
+(`ServeConfig.kernel`), over the emulated or the mesh-real collective
+backend (`ServeConfig.collective`, DESIGN.md §10), no VJP, no optimizer.
 
 Re-planning is feedback-driven, zero-tuning in spirit: a plan carries its
 own predicted miss rate (exact over the horizon it was built from), and
@@ -16,6 +17,17 @@ drifted away from the plan —
     replan  iff  rounds_since_plan >= replan_every        (cadence floor)
              or  batch overflowed its miss buffer          (hard signal)
              or  miss_rate > drift_factor * predicted      (soft signal)
+
+Because the whole index stage runs on the host at admission
+(`probe_host`), every drift signal is known *before* the batch executes —
+which is what makes the admission loop double-bufferable
+(``ServeConfig.double_buffer``): the runtime dispatches batch t to the
+device and, while it executes, enqueues/replans/probes batch t+1 on the
+host; batch t is only blocked on one round later.  Semantics are
+identical to the serial loop (each batch's plan/probe/cache snapshot is
+captured at dispatch), only the wall-clock overlap changes
+(`BENCH_serve.json` records the measured ratio; see the config field for
+why it defaults off on a CPU-only host).
 
 Overflowed requests are NEVER served zeros: their rows come back flagged,
 the requests re-enter the queue front, and the overflow itself is the
@@ -37,8 +49,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import StreamingIntentBuffer
-from repro.pm.embedding import (make_state, plain_serve_lookup,
-                                planned_serve_lookup, probe_host)
+from repro.pm.collectives import resolve
+from repro.pm.embedding import (plain_serve_lookup, planned_serve_lookup,
+                                probe_host)
 from repro.pm.planner import IntentPlanner, PlacementPlan
 from repro.serve.requests import RequestQueue
 from repro.serve.scheduler import MicroBatchScheduler
@@ -52,7 +65,22 @@ class ServeConfig:
     cache_capacity: int = 512
     managed: bool = True         # False: plain vocab-parallel baseline
     n_shards: int = 1            # emulated vocab shards (collective cost)
+    collective: str = "emulated"  # "emulated" | "mesh": collective backend
+    #   for the lookup data path ("mesh" shards the table over a real
+    #   device mesh and runs the shard_map psum — n_shards is then the
+    #   mesh size, not a cost model)
+    model_shards: int = 0        # mesh size for collective="mesh"
+    #   (0 = every local device)
     kernel: bool = False         # Pallas-backed lookup data path
+    double_buffer: bool = False  # overlap admission with execution: probe
+    #   batch t+1 on the host while the device executes batch t (the
+    #   probe-at-admission split makes this free of device readbacks).
+    #   Semantics are identical either way (tested); the overlap pays
+    #   when execution is off-host (TPU) — on this repo's 2-core CPU
+    #   container the "device" shares the host cores, so the pipeline
+    #   buys contention instead of parallelism (the same reason
+    #   ``kernel`` defaults off on CPU); BENCH_serve.json's ``overlap``
+    #   entry records the measured ratio either way
     replan_every: int = 8        # cadence floor (rounds between replans);
     #   0 = feedback-only mode: replan solely on drift signals (overflow /
     #   miss-rate), never on cadence or window exhaustion
@@ -93,6 +121,19 @@ class ServeResult:
         return float(np.mean(vals)) if vals else None
 
 
+@dataclass
+class _InFlight:
+    """A dispatched-but-not-yet-blocked batch (double-buffered admission):
+    everything bookkeeping needs was decided at dispatch time from the
+    host-side probe — blocking only realizes the rows and the clock."""
+
+    out: jnp.ndarray             # device future of the (T, D) rows
+    reqs: list                   # the batch's real requests
+    served: list                 # probe-decided: requests to serve
+    served_mask: np.ndarray      # per-req bool aligned with ``reqs``
+    tokens_shape: tuple
+
+
 class ServingRuntime:
     """Queue -> intent -> plan -> execute, one micro-batch per round."""
 
@@ -100,6 +141,10 @@ class ServingRuntime:
         self.cfg = cfg
         self.table = jnp.asarray(table)
         assert self.table.shape[0] == cfg.vocab
+        from repro.pm.collectives import make_backend
+        self.backend = make_backend(cfg.collective, cfg.model_shards)
+        if self.backend is not None:
+            self.table = self.backend.place_table(self.table)
         self.intent = StreamingIntentBuffer() if cfg.managed else None
         self.queue = RequestQueue(self.intent)
         self.scheduler = MicroBatchScheduler(cfg.batch_requests,
@@ -108,18 +153,18 @@ class ServingRuntime:
             cfg.vocab, cfg.cache_capacity, n_shards=cfg.batch_requests,
             plan_every=cfg.replan_every) if cfg.managed else None
         self.plan: Optional[PlacementPlan] = None
-        self._cache_ids = None           # device copy (make_state input)
+        self._cache_ids = None           # device copy (refresh input)
         self._cache_ids_np = None        # host copy (admission-time probe)
         self._cache_rows = None
         self._plain_fn = jax.jit(lambda t, toks: plain_serve_lookup(
-            t, toks, n_shards=cfg.n_shards))
+            t, toks, n_shards=cfg.n_shards, backend=self.backend))
         # one jitted data-path fn; XLA re-specializes per miss bucket
         # (buf_ids shape) — the planner's power-of-two bucket ladder keeps
         # that a handful of executables
         self._managed_fn = jax.jit(
             lambda t, cr, bi, h, cs, bs: planned_serve_lookup(
                 t, cr, bi, h, cs, bs, n_shards=cfg.n_shards,
-                kernel=cfg.kernel))
+                kernel=cfg.kernel, backend=self.backend))
 
     # ---------------------------------------------------------------- plan
     def _replan(self, rnd: int, res: ServeResult) -> None:
@@ -136,11 +181,13 @@ class ServingRuntime:
         res.plan_miss_capacities.append(self.plan.miss_capacity)
 
     def _refresh(self, res: ServeResult) -> None:
-        # eager on purpose: the XLA CPU backend lowers the jitted clip+
-        # gather+mask into a far slower fused gather than the op-by-op
-        # eager dispatch (measured 35ms vs 2.3ms for a (4096, 512) cache)
-        state = make_state(self.table, self._cache_ids)
-        self._cache_rows = state.cache_rows
+        # eager on purpose (emulated): the XLA CPU backend lowers the
+        # jitted clip+gather+mask into a far slower fused gather than the
+        # op-by-op eager dispatch (measured 35ms vs 2.3ms for a
+        # (4096, 512) cache); the mesh backend's refresh is the grouped
+        # all-gather shard_map, eager too
+        self._cache_rows = resolve(self.backend).refresh_rows(
+            self.table, self._cache_ids)
         res.refreshes += 1
 
     # ----------------------------------------------------------------- run
@@ -160,13 +207,34 @@ class ServingRuntime:
         round R lands at runtime round ``R - warmup_backlog`` in
         `miss_trace`).  ``measure_from`` excludes warm-up/compile rounds
         from the latency/throughput accounting (the miss trace always
-        covers every round)."""
+        covers every round).
+
+        With ``cfg.double_buffer`` the loop is a one-slot pipeline: the
+        round's batch is probed and *dispatched*, then the previous
+        round's batch is blocked and bookkept — so the device executes
+        batch t while the host enqueues, replans and probes batch t+1.
+        ``double_buffer=False`` blocks each batch in its own round (the
+        serial reference; identical results, no overlap)."""
         cfg = self.cfg
         if warmup_backlog is None:
             warmup_backlog = cfg.replan_every + 2
         res = ServeResult()
         drift = False
         last_replan = -10 ** 9
+        inflight: Optional[_InFlight] = None
+
+        def finish(fl: _InFlight) -> None:
+            out = jax.block_until_ready(fl.out)
+            now = time.perf_counter()
+            self.scheduler.note_served(fl.served, now)
+            self.queue.served(fl.served)
+            res.served += len(fl.served)
+            if collect_outputs:
+                out_h = np.asarray(out).reshape(fl.tokens_shape + (-1,))
+                for i, req in enumerate(fl.reqs):
+                    if fl.served_mask[i]:
+                        res.outputs[req.rid] = out_h[i]
+
         for rnd in range(-warmup_backlog, 0):
             self.queue.enqueue_many(stream.arrivals(rnd + warmup_backlog),
                                     time.perf_counter())
@@ -176,6 +244,10 @@ class ServingRuntime:
             self.queue.enqueue_many(stream.arrivals(rnd + warmup_backlog),
                                     time.perf_counter())
             if rnd == measure_from:
+                # drain the pipeline before the measurement window opens
+                if inflight is not None:
+                    finish(inflight)
+                    inflight = None
                 self.scheduler.latency.reset()
                 self.scheduler.n_served = 0
                 t0 = time.perf_counter()
@@ -205,13 +277,17 @@ class ServingRuntime:
             if batch is None or (cfg.managed and self.plan is None):
                 if batch is not None:        # nothing planned yet: put back
                     self.queue.requeue(batch.reqs)
+                if inflight is not None:     # idle round: drain the slot
+                    finish(inflight)
+                    inflight = None
                 continue
 
             if cfg.managed:
                 # admission-time host probe: intent means the batch's miss
                 # set is known before the batch runs — the device executes
                 # pure data movement, and drift feedback (miss rate,
-                # overflow flags) costs zero device readbacks
+                # overflow flags) costs zero device readbacks, so every
+                # serve/requeue/replan decision below happens pre-execution
                 B, K = batch.tokens.shape
                 probe = probe_host(self._cache_ids_np,
                                    batch.tokens.reshape(B * K),
@@ -261,17 +337,20 @@ class ServingRuntime:
                 out = self._plain_fn(self.table, jnp.asarray(batch.tokens))
                 served_mask = np.ones(len(batch.reqs), bool)
                 served = batch.reqs
-            out = jax.block_until_ready(out)
-            now = time.perf_counter()
-            self.scheduler.note_served(served, now)
-            self.queue.served(served)
-            res.served += len(served)
-            if collect_outputs:
-                out_h = np.asarray(out).reshape(batch.tokens.shape + (-1,))
-                for i, req in enumerate(batch.reqs):
-                    if served_mask[i]:
-                        res.outputs[req.rid] = out_h[i]
 
+            # one-slot pipeline: the previous batch is blocked only AFTER
+            # this round's host work (probe + dispatch above) — while that
+            # happened, the device was executing it
+            prev, inflight = inflight, _InFlight(
+                out, batch.reqs, served, served_mask, batch.tokens.shape)
+            if prev is not None:
+                finish(prev)
+            if not cfg.double_buffer:
+                finish(inflight)
+                inflight = None
+
+        if inflight is not None:             # drain the pipeline
+            finish(inflight)
         res.wall_s = time.perf_counter() - t0
         res.throughput_rps = self.scheduler.n_served / max(res.wall_s, 1e-9)
         lat = self.scheduler.latency

@@ -10,7 +10,10 @@ Per step:
      on replan rounds, plus every ``refresh_every`` steps; in between,
      replicas serve reads at most one refresh round stale);
   4. the train step runs with the managed embedding path (optionally the
-     Pallas-kernel-backed one, ``LoopConfig.kernel``).
+     Pallas-kernel-backed one, ``LoopConfig.kernel``; with
+     ``LoopConfig.collective="mesh"`` the table is vocab-sharded over a
+     real device mesh and the lookup/backward/refresh run through the
+     shard_map collectives of `pm.collectives.MeshBackend`).
 
 Miss-capacity buckets map to distinct compiled executables; the bucket
 ladder is small (powers of two) so recompiles amortize away.
@@ -49,6 +52,13 @@ class LoopConfig:
     optimizer: str = "adagrad"
     pm: bool = True                  # intent-managed embedding on/off
     kernel: bool = False             # Pallas-backed managed hot path
+    collective: str = "emulated"     # "emulated" | "mesh": the managed
+    #                                  lookup's collective backend
+    #                                  (pm/collectives.py); "mesh" shards
+    #                                  the table over a real device mesh
+    #                                  and runs the shard_map psum path
+    model_shards: int = 0            # mesh size for collective="mesh"
+    #                                  (0 = every local device)
     cache_capacity: int = 256
     n_shards: int = 1
     prefetch: int = 16
@@ -95,9 +105,26 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig) -> LoopResult:
             path, {"params": params, "opt": opt_state})
         params, opt_state = restored["params"], restored["opt"]
 
+    # collective backend for the managed lookup: the emulated single-
+    # device reference, or the real shard_map psum path over a vocab-
+    # sharded table (DESIGN.md §10) — in which case the table (and its
+    # optimizer accumulator) is placed owner-sharded up front and every
+    # gather/scatter/refresh below runs through explicit mesh collectives
+    backend = None
+    if lc.pm:
+        from repro.pm.collectives import make_backend
+        backend = make_backend(lc.collective, lc.model_shards)
+    if backend is not None:
+        params["embed"] = backend.place_table(params["embed"])
+        opt_state = jax.tree_util.tree_map(
+            lambda a: backend.place_table(a)
+            if a.shape == params["embed"].shape else a, opt_state)
+
     planner = IntentPlanner(cfg.vocab_size, lc.cache_capacity,
                             n_shards=max(1, lc.n_shards),
-                            plan_every=lc.plan_every) if lc.pm else None
+                            plan_every=lc.plan_every,
+                            per_node_bound=backend is not None
+                            ) if lc.pm else None
     loader = IntentSignalingLoader(
         cfg, lc.batch, lc.seq, n_shards=max(1, lc.n_shards),
         prefetch=lc.prefetch, planner=planner, seed=lc.seed)
@@ -108,7 +135,8 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig) -> LoopResult:
         if miss_capacity not in step_fns:
             step_fns[miss_capacity] = jax.jit(make_train_step(
                 cfg, optimizer=lc.optimizer, lr=lc.lr,
-                pm_miss_capacity=miss_capacity, pm_kernel=lc.kernel))
+                pm_miss_capacity=miss_capacity, pm_kernel=lc.kernel,
+                pm_backend=backend))
         return step_fns[miss_capacity]
 
     plan: Optional[PlacementPlan] = None
@@ -134,7 +162,7 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig) -> LoopResult:
             if replanned or cache_rows is None or (
                     lc.refresh_every > 0
                     and step % lc.refresh_every == 0):
-                state = make_state(params["embed"], cache_ids)
+                state = make_state(params["embed"], cache_ids, backend)
                 cache_rows = state.cache_rows
                 res.refreshes += 1
             batch = dict(batch,

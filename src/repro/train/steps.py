@@ -18,7 +18,7 @@ from repro.optim.optimizers import (AdaGradState, adagrad_init,
 def make_train_step(cfg: ModelConfig, *, optimizer: str = "adagrad",
                     lr: float = 0.01, pm_miss_capacity: int = 0,
                     pm_strict: bool = False, pm_kernel: bool = False,
-                    remat: bool = True,
+                    pm_backend=None, remat: bool = True,
                     remat_policy: str = "full",
                     vp_loss_mesh=None, fsdp_spec=None,
                     act_spec=None) -> Callable:
@@ -30,6 +30,10 @@ def make_train_step(cfg: ModelConfig, *, optimizer: str = "adagrad",
     untied AdaGrad runs — applies the embedding update via the fused sparse
     row kernel on exactly the touched rows instead of a dense (V, D) sweep.
 
+    ``pm_backend``: the collective backend for the managed lookup
+    (`repro.pm.collectives`; None = single-device emulated reference, a
+    `MeshBackend` runs the real shard_map psum data path).
+
     ``vp_loss_mesh``: a Mesh enables the explicit vocab-parallel CE
     (shard_map collective schedule, `repro.models.losses`) instead of the
     GSPMD-derived loss — §Perf iteration 3.
@@ -37,9 +41,13 @@ def make_train_step(cfg: ModelConfig, *, optimizer: str = "adagrad",
     update = adagrad_update if optimizer == "adagrad" else adam_update
     # sparse row updates need the gradient support to be exactly the batch
     # tokens: tied embeddings receive dense head gradients, so they keep
-    # the dense optimizer sweep.
+    # the dense optimizer sweep.  The mesh backend also keeps it: the
+    # fused row kernel would need a shard_map wrapper to update a
+    # vocab-sharded table in place (the dense sweep is elementwise and
+    # partitions for free).
     sparse_embed = (pm_kernel and pm_miss_capacity > 0
-                    and optimizer == "adagrad" and not cfg.tie_embeddings)
+                    and optimizer == "adagrad" and not cfg.tie_embeddings
+                    and not getattr(pm_backend, "mesh_real", False))
 
     def train_step(params, opt_state, batch):
         def loss(p):
@@ -50,7 +58,7 @@ def make_train_step(cfg: ModelConfig, *, optimizer: str = "adagrad",
                                     remat_policy=remat_policy,
                                     pm_miss_capacity=pm_miss_capacity,
                                     pm_strict=pm_strict, pm_kernel=pm_kernel,
-                                    skip_head=True,
+                                    pm_backend=pm_backend, skip_head=True,
                                     fsdp_spec=fsdp_spec, act_spec=act_spec)
                 head = p["embed"].T if cfg.tie_embeddings else p["head"]
                 return vocab_parallel_ce(
@@ -60,6 +68,7 @@ def make_train_step(cfg: ModelConfig, *, optimizer: str = "adagrad",
                                      remat_policy=remat_policy,
                                      pm_miss_capacity=pm_miss_capacity,
                                      pm_strict=pm_strict, pm_kernel=pm_kernel,
+                                     pm_backend=pm_backend,
                                      fsdp_spec=fsdp_spec,
                                      act_spec=act_spec)
             return loss_fn(logits, batch["labels"], aux)

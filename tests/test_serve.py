@@ -294,6 +294,73 @@ class TestDriftAdaptation:
             assert res.served + len(rt.queue) == stream._next_rid
 
 
+class TestDoubleBufferedAdmission:
+    """The one-slot admission pipeline (probe batch t+1 while the device
+    executes batch t) is a pure wall-clock transform: identical serves,
+    requeues, replans and rows as the serial loop."""
+
+    def test_pipeline_semantics_identical_to_serial(self):
+        rng = np.random.default_rng(0)
+        table = rng.normal(size=(2048, 8)).astype(np.float32)
+        live = DriftingZipfStream(2048, 8, zipf_a=1.2, arrival_rate=16,
+                                  scenario="rotate", rotate_every=10,
+                                  seed=5)
+        replay = ReplayStream.record(live, 50)
+        results = {}
+        for db in (False, True):
+            cfg = ServeConfig(vocab=2048, batch_requests=16,
+                              keys_per_request=8, cache_capacity=256,
+                              replan_every=6, double_buffer=db)
+            rt = ServingRuntime(table, cfg)
+            results[db] = rt.run(replay, rounds=30, collect_outputs=True)
+        a, b = results[False], results[True]
+        assert a.served == b.served
+        assert a.requeues == b.requeues
+        assert a.replans == b.replans
+        assert a.replan_rounds == b.replan_rounds
+        assert a.miss_trace == b.miss_trace
+        assert b.zero_served == 0
+        assert set(a.outputs) == set(b.outputs)
+        for rid in a.outputs:
+            np.testing.assert_array_equal(a.outputs[rid], b.outputs[rid])
+
+    def test_pipeline_drains_on_idle_and_exit(self):
+        """Batches in flight at an idle round or at loop exit are always
+        finished — nothing admitted is ever dropped."""
+        rng = np.random.default_rng(1)
+        table = rng.normal(size=(512, 8)).astype(np.float32)
+        cfg = ServeConfig(vocab=512, batch_requests=4, keys_per_request=4,
+                          cache_capacity=64, replan_every=4,
+                          double_buffer=True)
+
+        class TrickleStream:
+            """Arrivals only every third round: forces idle rounds with a
+            batch still in flight."""
+
+            def __init__(self):
+                self.n = 0
+
+            def arrivals(self, rnd):
+                if rnd % 3:
+                    return []
+                out = [ServeRequest(self.n + i,
+                                    np.arange(1 + i, 5 + i))
+                       for i in range(4)]
+                self.n += 4
+                return out
+
+        stream = TrickleStream()
+        rt = ServingRuntime(table, cfg)
+        res = rt.run(stream, rounds=18, warmup_backlog=1,
+                     collect_outputs=True)
+        assert res.zero_served == 0
+        assert res.served + len(rt.queue) == stream.n
+        for rid, rows in res.outputs.items():
+            np.testing.assert_allclose(
+                rows, table[np.arange(1 + rid % 4, 5 + rid % 4)],
+                rtol=1e-6)
+
+
 class TestOverflowRequeue:
     """Serving analogue of TestMissDedup: a request whose keys overflow
     the planned miss buffer is re-queued and served exactly later —
