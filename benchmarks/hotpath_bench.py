@@ -1,0 +1,282 @@
+"""Managed train-step hot-path benchmark: the single-sort fused step
+(ISSUE 5) vs a faithful replica of the PR-4 step, paired per shape.
+
+What changed and what this measures
+-----------------------------------
+The PR-4 managed step paid its index arithmetic three times — the forward
+`probe_and_compact`, the backward `segment_rows` pre-sum and the
+optimizer's `unique_rows` dedup each ran an independent O(T log T) argsort
+over the same token ids — and its backward materialized a dense (V, D)
+gradient (zeros + row scatter) that the optimizer immediately re-gathered
+from.  The fused step computes ONE `step_residual` and routes the compact
+(T, D) row grads straight through the residual-fed segment into the
+AdaGrad row update; no dense gradient buffer exists and the table/accum
+buffers are donated.
+
+Both variants here run the pure-jnp row data path (`kernels.ref`): on this
+CPU container interpret-mode Pallas timings are meaningless, and the jnp
+path isolates exactly what the PR changed — index work and memory traffic
+— identically for both sides.  Paired medians: the two steps alternate
+call-for-call on identical inputs and each reports its median latency.
+
+Output: ``BENCH_hotpath.json`` at the repo root — full-scale entries plus
+CI-scale ``quick_entries`` — with the headline speedup at zipf 1.0 across
+D ∈ {64, 576, 1024}.
+
+CLI:
+  python -m benchmarks.hotpath_bench [--quick]
+  python -m benchmarks.hotpath_bench --quick --check-baseline BENCH_hotpath.json
+
+``--check-baseline`` is the CI regression guard: it re-measures the quick
+shapes and FAILS (exit 1) if the managed-step median regressed more than
+15% against the committed baseline.  The comparison is machine-normalized
+through the paired PR-4 replica — current speedup vs baseline speedup —
+so absolute CPU-speed differences between CI hosts don't trip it, while a
+real hot-path regression (which slows the fused step but not its paired
+baseline) does.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import SyntheticCorpus
+from repro.kernels import ops, ref
+from repro.kernels.pm_forward import probe_and_compact, step_residual
+from repro.pm.planner import _bucket
+
+_REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+_OUT = os.path.join(_REPO_ROOT, "BENCH_hotpath.json")
+
+FULL = dict(V=65536, B=16, S=512, C=1024, iters=9)
+QUICK = dict(V=16384, B=8, S=256, C=512, iters=7)
+DIMS = (64, 576, 1024)
+SKEWS_FULL = (1.0, 1.1, 1.5)
+SKEWS_QUICK = (1.0, 1.1)
+REGRESSION_TOL = 1.15          # CI guard: >15% median regression fails
+
+
+def _make_steps(table, accum, cache_ids, cache_rows, tokens, M, V, lr=0.1):
+    """Paired step functions over identical inputs.  Both share the same
+    forward select and the same AdaGrad row math; they differ exactly in
+    the index work and gradient materialization this PR removed."""
+    B, S = tokens.shape
+    T = B * S
+    D = table.shape[1]
+    tok = tokens.reshape(T).astype(jnp.int32)
+
+    def _combine(table, pc):
+        buf_rows = jnp.take(table, pc.buf_ids, axis=0)
+        buffer = jnp.concatenate(
+            [buf_rows, jnp.zeros((1, D), table.dtype)])
+        return ref.pm_combine_ref(pc.hit, pc.cache_slot, pc.buf_slot,
+                                  cache_rows, buffer)
+
+    @jax.jit
+    def legacy_step(table, accum):
+        # PR-4 shape of the step: probe sort (fwd), segment sort + dense
+        # (V+1, D) gradient materialization (bwd), unique sort + dense
+        # re-gather (optimizer)
+        pc = probe_and_compact(cache_ids, tok, M)              # sort 1
+        out = _combine(table, pc)
+        gt = 2.0 * out                                         # d sum(out^2)
+        seg_ids, seg_g = ops.segment_rows(tok, gt, n_slots=T,
+                                          pad_id=V)            # sort 2
+        g_dense = ref.scatter_rows_ref(
+            jnp.zeros((V + 1, D), jnp.float32), seg_ids, seg_g)[:V]
+        ids = ops.unique_rows(tok, n_slots=T, pad_id=V)[::-1]  # sort 3
+        valid = ids < V
+        ids = jnp.where(valid, ids, 0)
+        rows_g = jnp.take(g_dense, ids, axis=0) \
+            * valid[:, None].astype(jnp.float32)
+        return ref.adagrad_row_update_ref(table, accum, ids, rows_g, lr=lr)
+
+    def fused_body(table, accum):
+        res = step_residual(cache_ids, tok, M)                 # THE sort
+        out = _combine(table, res.probe)
+        gt = 2.0 * out
+        seg_ids, seg_g = ops.segment_rows(tok, gt, n_slots=T, pad_id=V,
+                                          residual=res.sort)   # no sort
+        ids = seg_ids[::-1]
+        valid = ids < V
+        ids = jnp.where(valid, ids, 0)
+        rows_g = seg_g[::-1] * valid[:, None].astype(jnp.float32)
+        return ref.adagrad_row_update_ref(table, accum, ids, rows_g, lr=lr)
+
+    # the fused step donates its hot buffers, matching `train.loop`'s
+    # donate_argnums (real even on the XLA CPU backend: the timing loop
+    # hands it fresh copies, prepared outside the timed region)
+    fused_step = jax.jit(fused_body, donate_argnums=(0, 1))
+    return legacy_step, fused_step
+
+
+def _paired_medians(legacy, fused, table, accum, iters: int):
+    """Alternate the two steps call-for-call on identical inputs and
+    return (legacy_median_us, fused_median_us).  The fused step's inputs
+    are donated, so each call gets fresh copies prepared (and blocked on)
+    outside the timed region."""
+    def fused_inputs():
+        pair = (jnp.copy(table), jnp.copy(accum))
+        jax.block_until_ready(pair)
+        return pair
+
+    jax.block_until_ready(legacy(table, accum))        # compile
+    jax.block_until_ready(fused(*fused_inputs()))
+    tl, tf = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(legacy(table, accum))
+        tl.append(time.perf_counter() - t0)
+        tc, ac = fused_inputs()
+        t0 = time.perf_counter()
+        jax.block_until_ready(fused(tc, ac))
+        tf.append(time.perf_counter() - t0)
+    return float(np.median(tl) * 1e6), float(np.median(tf) * 1e6)
+
+
+def _bench_entries(dims: dict, skews) -> List[dict]:
+    V, B, S, C = dims["V"], dims["B"], dims["S"], dims["C"]
+    entries = []
+    for zipf_a in skews:
+        corpus = SyntheticCorpus(V, zipf_a=zipf_a, seed=0)
+        tokens = jnp.asarray(corpus.tokens((B, S)))
+        cache_np = np.sort(corpus.perm[:C]).astype(np.int32)
+        cache_ids = jnp.asarray(cache_np)
+        uniq = np.unique(np.asarray(tokens))
+        n_miss = int(np.setdiff1d(uniq, cache_np).size)
+        M = _bucket(max(1, n_miss))      # exact intent-derived bound
+        for D in DIMS:
+            rng = np.random.default_rng(1)
+            table = jnp.asarray(rng.normal(size=(V, D)), jnp.float32)
+            accum = jnp.full((V, D), 0.1, jnp.float32)
+            cache_rows = jnp.take(table, cache_ids, axis=0)
+            legacy, fused = _make_steps(table, accum, cache_ids,
+                                        cache_rows, tokens, M, V)
+            lus, fus = _paired_medians(legacy, fused, table, accum,
+                                       dims["iters"])
+            entries.append(dict(zipf=zipf_a, D=D, V=V, T=B * S, M=M,
+                                legacy_us=round(lus, 1),
+                                fused_us=round(fus, 1),
+                                speedup=round(lus / fus, 3)))
+            print(f"hotpath,managed_step,zipf{zipf_a}_D{D},us_legacy,"
+                  f"{lus:.1f}")
+            print(f"hotpath,managed_step,zipf{zipf_a}_D{D},us_fused,"
+                  f"{fus:.1f}")
+            print(f"hotpath,managed_step,zipf{zipf_a}_D{D},speedup,"
+                  f"{lus / fus:.2f}")
+    return entries
+
+
+def _headline(entries: List[dict]) -> dict:
+    at10 = [e["speedup"] for e in entries if e["zipf"] == 1.0]
+    return {"speedup_zipf1.0_min": round(min(at10), 3),
+            "speedup_zipf1.0_median": round(float(np.median(at10)), 3)}
+
+
+def run(quick: bool = False) -> List[str]:
+    """Benchmark-harness entry point (also wired into `benchmarks.run`).
+    Full runs refresh both the full-scale entries and the CI-scale quick
+    entries; ``--quick`` refreshes only the quick section (preserving any
+    committed full entries)."""
+    doc = {}
+    if os.path.exists(_OUT):
+        with open(_OUT) as f:
+            doc = json.load(f)
+    doc["bench"] = "hotpath"
+    doc.setdefault("note", (
+        "Single-sort fused managed step vs PR-4 replica (3 sorts + dense "
+        "(V,D) grad), paired medians on the jnp data path; speedups are "
+        "per identical (zipf, D) shape."))
+    rows = []
+    if not quick:
+        doc["config"] = {k: v for k, v in FULL.items()}
+        doc["entries"] = _bench_entries(FULL, SKEWS_FULL)
+        doc["headline"] = _headline(doc["entries"])
+    doc["quick_config"] = {k: v for k, v in QUICK.items()}
+    doc["quick_entries"] = _bench_entries(QUICK, SKEWS_QUICK)
+    doc["quick_headline"] = _headline(doc["quick_entries"])
+    with open(_OUT, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {os.path.relpath(_OUT)}")
+    for e in doc.get("entries", []) + doc["quick_entries"]:
+        rows.append(f"hotpath,managed_step,zipf{e['zipf']}_D{e['D']},"
+                    f"speedup,{e['speedup']}")
+    return rows
+
+
+def check_baseline(path: str) -> int:
+    """CI regression guard: re-measure the quick shapes and compare each
+    (zipf, D) pair's fused-step median against the committed baseline,
+    normalized through the paired legacy replica (machine-independent).
+    Returns a process exit code."""
+    with open(path) as f:
+        base = json.load(f)
+    base_entries = {(e["zipf"], e["D"]): e
+                    for e in base.get("quick_entries", [])}
+    if not base_entries:
+        print(f"no quick_entries baseline in {path}")
+        return 1
+    def measure_ratios():
+        """Per-shape fused median in units of its paired legacy median,
+        relative to the committed baseline (>1 = slower than committed)."""
+        ratios = {}
+        for e in _bench_entries(QUICK, SKEWS_QUICK):
+            key = (e["zipf"], e["D"])
+            if key not in base_entries:
+                continue
+            b = base_entries[key]
+            now = e["fused_us"] / e["legacy_us"]
+            then = b["fused_us"] / b["legacy_us"]
+            ratios[key] = now / then
+            print(f"zipf{key[0]}_D{key[1]}: fused/legacy now {now:.3f} vs "
+                  f"baseline {then:.3f} (x{now / then:.2f})")
+        return ratios
+
+    def geomean(vals):
+        return float(np.exp(np.mean(np.log(list(vals)))))
+
+    ratios = measure_ratios()
+    if not ratios:
+        print("no overlapping (zipf, D) entries with the baseline")
+        return 1
+    # a real hot-path regression slows the fused step on EVERY shape and
+    # in EVERY run, so the verdict (a) aggregates across shapes (geomean)
+    # and (b) on a first-pass trip, re-measures and keeps each shape's
+    # best-of-two — one-sided scheduler noise on a shared CI host doesn't
+    # reproduce, a genuine regression does
+    geo = geomean(ratios.values())
+    print(f"normalized managed-step median vs baseline: x{geo:.3f} "
+          f"(geomean over {len(ratios)} shapes, tolerance "
+          f"x{REGRESSION_TOL})")
+    if geo > REGRESSION_TOL:
+        print("possible regression — re-measuring to filter host noise")
+        second = measure_ratios()
+        best = {k: min(v, second.get(k, v)) for k, v in ratios.items()}
+        geo = geomean(best.values())
+        print(f"best-of-two normalized median: x{geo:.3f}")
+    if geo > REGRESSION_TOL:
+        print(f"managed-step median regressed >15% vs {path}")
+        return 1
+    print("hot-path median within 15% of the committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized shapes only")
+    ap.add_argument("--check-baseline", metavar="JSON", default=None,
+                    help="regression guard: compare against a committed "
+                    "BENCH_hotpath.json instead of writing results")
+    args = ap.parse_args()
+    if args.check_baseline:
+        raise SystemExit(check_baseline(args.check_baseline))
+    run(quick=args.quick)

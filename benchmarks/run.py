@@ -15,6 +15,10 @@ One module per paper table/figure (DESIGN.md §8):
   mesh_bench            — managed vs plain over the mesh-real shard_map
                           psum path, 8-device host mesh (re-execs itself
                           with XLA_FLAGS when needed, BENCH_mesh.json)
+  hotpath_bench         — single-sort fused managed step vs the PR-4
+                          three-sort/dense-grad replica, paired medians
+                          (BENCH_hotpath.json; also the CI regression
+                          guard via --check-baseline)
 
 Output: ``benchmark,variant,task,metric,value`` CSV rows on stdout and in
 ``benchmarks/results/benchmarks.csv``.  ``--quick`` additionally writes
@@ -42,6 +46,7 @@ _ALIASES = {
     "kernels_bench": "kernels",
     "serve_bench": "serve",
     "mesh_bench": "mesh",
+    "hotpath_bench": "hotpath",
 }
 
 
@@ -54,8 +59,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from . import (fig6_overall, fig7_scalability, fig8_timing,
-                   fig15_traces, kernels_bench, mesh_bench, quality_mf,
-                   scale_sweep, serve_bench, table2_communication)
+                   fig15_traces, hotpath_bench, kernels_bench, mesh_bench,
+                   quality_mf, scale_sweep, serve_bench,
+                   table2_communication)
 
     scale = 0.2 if args.quick else 0.5
     benches = {
@@ -73,6 +79,7 @@ def main(argv=None):
         "scale_sweep": lambda: scale_sweep.run(quick=args.quick),
         "serve": lambda: serve_bench.run(quick=args.quick),
         "mesh": lambda: mesh_bench.run(quick=args.quick),
+        "hotpath": lambda: hotpath_bench.run(quick=args.quick),
     }
     only = None
     if args.only:

@@ -6,16 +6,21 @@ parameter manager is applying sparse row updates:
     accum[id] += g^2
     table[id] -= lr * g / (sqrt(accum[id]) + eps)
 
-TPU adaptation: the update is a scalar-prefetched blocked scatter with
-input/output aliasing — program (i, j) stages tile (ids[i], j) of both the
-table and the accumulator into VMEM, applies the fused update against the
-i-th gradient row tile, and writes back in place (no separate gather /
-square / rsqrt / scatter round trips through HBM).
+TPU adaptation: table and accumulator stay HBM-resident (``memory_space=
+ANY``) and are donated in place (input/output aliasing — no fresh (V, D)
+allocation per step).  Each grid program owns a ``(block_r, block_d)``
+gradient tile (multi-row tiling, ~block_r× fewer programs than the old
+one-row grid) and, per row: DMAs the table/accum row tile into VMEM
+scratch, applies the fused update against the gradient row, and DMAs the
+result back.  The copies are issued and waited in row order inside the
+program and the grid is sequential, so a read always observes the
+preceding write (the property the pad-slot reversal in `train.steps`
+relies on).
 
 Row ids must be UNIQUE within one call (duplicates are pre-aggregated by
-`repro.kernels.ops.segment_rows`); the TPU grid executes sequentially so
-duplicates would not race, but their semantics (sequential apply) would
-differ from the summed-gradient oracle.
+`repro.kernels.ops.segment_rows`, which itself reuses the step's sort
+residual); duplicate ids would not race, but their sequential-apply
+semantics would differ from the summed-gradient oracle.
 """
 
 from __future__ import annotations
@@ -27,27 +32,93 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .blocking import pick_block_d
+from .blocking import pad_d, pick_blocks
 
 
 def _make_kernel(lr: float, eps: float):
     def kernel(ids_ref, table_ref, accum_ref, grad_ref,
-               table_out, accum_out):
-        g = grad_ref[...].astype(jnp.float32)
-        acc = accum_ref[...].astype(jnp.float32) + g * g
-        p = table_ref[...].astype(jnp.float32)
-        p = p - lr * g / (jnp.sqrt(acc) + eps)
-        accum_out[...] = acc.astype(accum_out.dtype)
-        table_out[...] = p.astype(table_out.dtype)
+               table_out, accum_out, tbuf, abuf, sem):
+        i, j = pl.program_id(0), pl.program_id(1)
+        block_r, block_d = grad_ref.shape
+        n = ids_ref.shape[0]
+        for r in range(block_r):
+            row = i * block_r + r
+
+            @pl.when(row < n)
+            def _():
+                idx = ids_ref[row]
+                col = pl.ds(j * block_d, block_d)
+                cin = pltpu.make_async_copy(table_out.at[idx, col],
+                                            tbuf.at[0], sem)
+                cin.start()
+                cin.wait()
+                ain = pltpu.make_async_copy(accum_out.at[idx, col],
+                                            abuf.at[0], sem)
+                ain.start()
+                ain.wait()
+                g = grad_ref[r].astype(jnp.float32)
+                acc = abuf[0].astype(jnp.float32) + g * g
+                p = tbuf[0].astype(jnp.float32) \
+                    - lr * g / (jnp.sqrt(acc) + eps)
+                abuf[0] = acc.astype(abuf.dtype)
+                tbuf[0] = p.astype(tbuf.dtype)
+                cout = pltpu.make_async_copy(tbuf.at[0],
+                                             table_out.at[idx, col], sem)
+                cout.start()
+                cout.wait()
+                aout = pltpu.make_async_copy(abuf.at[0],
+                                             accum_out.at[idx, col], sem)
+                aout.start()
+                aout.wait()
     return kernel
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("lr", "eps", "block_d", "interpret"))
+@functools.partial(jax.jit, static_argnames=("lr", "eps", "block_r",
+                                             "block_d", "interpret"))
+def _adagrad_row_update(table, accum, ids, grads, lr: float, eps: float,
+                        block_r: int, block_d: int, interpret: bool):
+    n = ids.shape[0]
+    V, D = table.shape
+    dp = pad_d(D)
+    if dp != D:
+        table = jnp.pad(table, ((0, 0), (0, dp - D)))
+        accum = jnp.pad(accum, ((0, 0), (0, dp - D)))
+        grads = jnp.pad(grads, ((0, 0), (0, dp - D)))
+    grid = (-(-n // block_r), dp // block_d)
+    ANY = pltpu.TPUMemorySpace.ANY
+    out = pl.pallas_call(
+        _make_kernel(float(lr), float(eps)),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(memory_space=ANY),                   # table
+                pl.BlockSpec(memory_space=ANY),                   # accum
+                pl.BlockSpec((block_r, block_d),
+                             lambda i, j, ids_ref: (i, j)),       # grads
+            ],
+            out_specs=[pl.BlockSpec(memory_space=ANY),
+                       pl.BlockSpec(memory_space=ANY)],
+            scratch_shapes=[pltpu.VMEM((1, block_d), table.dtype),
+                            pltpu.VMEM((1, block_d), accum.dtype),
+                            pltpu.SemaphoreType.DMA],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((V, dp), table.dtype),
+                   jax.ShapeDtypeStruct((V, dp), accum.dtype)],
+        input_output_aliases={1: 0, 2: 1},  # table->out0, accum->out1
+        interpret=interpret,
+    )(ids.astype(jnp.int32), table, accum, grads)
+    if dp != D:
+        out = [o[:, :D] for o in out]
+    return tuple(out)
+
+
 def adagrad_row_update(table: jnp.ndarray, accum: jnp.ndarray,
                        ids: jnp.ndarray, grads: jnp.ndarray, *,
                        lr: float = 0.1, eps: float = 1e-8,
-                       block_d: int = 512, interpret: bool = True):
+                       block_r: int | None = None,
+                       block_d: int | None = None,
+                       interpret: bool = True):
     """Apply AdaGrad to rows ``ids`` of (table, accum) with ``grads``.
 
     table, accum: (V, D); ids: (n,) unique int32; grads: (n, D).
@@ -55,34 +126,19 @@ def adagrad_row_update(table: jnp.ndarray, accum: jnp.ndarray,
     TPU: donated buffers, no fresh HBM allocation for the full tables).
     """
     n = ids.shape[0]
-    V, D = table.shape
-    block_d = pick_block_d(D, block_d)
-    grid = (n, D // block_d)
+    D = table.shape[1]
 
-    def row_tile(i, j, ids_ref):
-        return (ids_ref[i], j)
+    def bench(br, bd):
+        from .blocking import probe_ids, time_bench
+        t = jnp.zeros(table.shape, table.dtype)
+        a = jnp.zeros(accum.shape, accum.dtype)
+        z = probe_ids(n, table.shape[0])
+        g = jnp.zeros(grads.shape, grads.dtype)
+        return time_bench(
+            lambda: _adagrad_row_update(t, a, z, g, lr, eps, br, bd,
+                                        interpret))
 
-    def grad_tile(i, j, ids_ref):
-        return (i, j)
-
-    kernel = _make_kernel(float(lr), float(eps))
-    return pl.pallas_call(
-        kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, block_d), row_tile),   # table
-                pl.BlockSpec((1, block_d), row_tile),   # accum
-                pl.BlockSpec((1, block_d), grad_tile),  # grads
-            ],
-            out_specs=[
-                pl.BlockSpec((1, block_d), row_tile),
-                pl.BlockSpec((1, block_d), row_tile),
-            ],
-        ),
-        out_shape=[jax.ShapeDtypeStruct(table.shape, table.dtype),
-                   jax.ShapeDtypeStruct(accum.shape, accum.dtype)],
-        input_output_aliases={1: 0, 2: 1},  # table->out0, accum->out1
-        interpret=interpret,
-    )(ids.astype(jnp.int32), table, accum, grads)
+    br, bd = pick_blocks("adagrad", n, D, table.dtype, block_r=block_r,
+                         block_d=block_d, bench=bench)
+    return _adagrad_row_update(table, accum, ids, grads, lr=lr, eps=eps,
+                               block_r=br, block_d=bd, interpret=interpret)

@@ -1,15 +1,159 @@
-"""Shared tile-size selection for the row-blocked kernels."""
+"""Tile-size selection for the row-blocked kernels: lane-aligned feature
+padding plus a small measured autotuner.
+
+Every row kernel in this package moves `(block_r, block_d)` tiles of row
+data (multi-row tiling — the grid is ``(ceil(n / block_r), D' / block_d)``,
+a ~block_r× smaller grid than the old one-row-per-program layout).  Two
+decisions live here so the kernels stay mechanical:
+
+  feature dim   ``pad_d`` rounds D up to the next multiple of the 128-lane
+                VREG width.  Non-lane-aligned D (576, 570, ...) used to
+                silently shrink the tile to the largest divisor (D=570 ->
+                block 2 — a 285× grid blow-up); now the kernels pad the
+                feature dim and keep full-lane tiles, slicing the pad off
+                on the way out.  Lane-aligned D pays nothing; odd D pays
+                full pad/slice copies of the row operands (and forfeits
+                in-place donation for that call) — keep embedding dims
+                lane-aligned on the hot path, padding is the correctness
+                escape hatch.
+  tile shape    `pick_blocks` answers (block_r, block_d) per
+                (kind, n, d, dtype, backend).  The default is a cheap
+                heuristic; when measurement is enabled the caller hands in
+                a ``bench(block_r, block_d) -> seconds`` probe and the
+                result is cached per key, so each shape is measured once
+                per process (trace-time only — kernels re-trace per shape
+                anyway).
+
+Overrides, strongest first: `set_block_override()` (config hook used by
+tests and launch scripts), then the ``REPRO_BLOCK_R`` / ``REPRO_BLOCK_D``
+environment variables, then the autotuner cache.  ``REPRO_AUTOTUNE``
+selects the tuning mode: ``auto`` (default — measure only on a real
+accelerator backend, heuristic on CPU where interpret-mode timing is
+meaningless), ``measure`` (always measure when a bench probe is given),
+``off`` (heuristic only).
+"""
 
 from __future__ import annotations
 
+import os
+from typing import Callable, Dict, Optional, Tuple
 
-def pick_block_d(d: int, block_d: int) -> int:
-    """Largest divisor of ``d`` that is <= ``block_d``: the row kernels
-    tile the feature dim in (1, block_d) blocks, so the tile must divide D
-    exactly (e.g. D=576 with the default 512 cap -> 288).  Multiples of
-    128 (the VREG lane width) are preferred automatically whenever D
-    itself is lane-aligned; trace-time only, so the linear scan is free."""
-    b = max(1, min(block_d, d))
-    while d % b:
-        b -= 1
-    return b
+LANE = 128            # VREG lane width: feature tiles are multiples of this
+DEFAULT_BLOCK_D = 512  # cap on the feature-tile width
+DEFAULT_BLOCK_R = 8    # rows per program (multi-row tiling)
+_ROW_CANDIDATES = (1, 2, 4, 8, 16)
+
+_TUNE_CACHE: Dict[tuple, Tuple[int, int]] = {}
+_OVERRIDE: Dict[str, Optional[int]] = {"block_r": None, "block_d": None}
+
+
+def pad_d(d: int) -> int:
+    """Feature dim rounded up to the next multiple of the 128-lane width
+    (the kernels pad their row data to this and slice the pad off)."""
+    return -(-d // LANE) * LANE
+
+
+def pick_block_d(d: int, block_d: int = DEFAULT_BLOCK_D) -> int:
+    """Largest lane-multiple tile width that divides the *padded* feature
+    dim and is <= the ``block_d`` cap (never below one 128-lane tile).
+
+    The old rule returned the largest divisor of the raw D, so D=576
+    shrank the tile to 288 and D=570 collapsed it to 2; padding keeps the
+    tile full-width regardless of alignment."""
+    lanes = pad_d(d) // LANE
+    cap = max(1, block_d // LANE)
+    best = 1
+    for k in range(1, lanes + 1):
+        if lanes % k == 0 and k <= cap:
+            best = k
+    return best * LANE
+
+
+def set_block_override(block_r: Optional[int] = None,
+                       block_d: Optional[int] = None) -> None:
+    """Config hook: pin the tile shape globally (None clears a field).
+    Takes effect for kernels traced after the call."""
+    _OVERRIDE["block_r"] = block_r
+    _OVERRIDE["block_d"] = block_d
+
+
+def clear_autotune_cache() -> None:
+    _TUNE_CACHE.clear()
+
+
+def probe_ids(n: int, n_rows: int):
+    """Row ids for an autotune measurement probe: spread over the table
+    (unique whenever n <= n_rows) so the timed DMA pattern resembles a
+    real scattered access, not n hits on row 0."""
+    import jax.numpy as jnp
+    return (jnp.arange(n, dtype=jnp.int32) % max(1, n_rows))
+
+
+def time_bench(fn: Callable, iters: int = 3) -> float:
+    """Seconds per call of ``fn()`` (one untimed warmup/compile call) —
+    the measurement probe the kernel wrappers hand to `pick_blocks`."""
+    import time
+
+    import jax
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _env_int(name: str) -> Optional[int]:
+    v = os.environ.get(name)
+    return int(v) if v else None
+
+
+def _measure_enabled(bench) -> bool:
+    if bench is None:
+        return False
+    mode = os.environ.get("REPRO_AUTOTUNE", "auto")
+    if mode == "off":
+        return False
+    if mode == "measure":
+        return True
+    # "auto": interpret-mode timings on CPU are meaningless; only measure
+    # where the kernels compile natively
+    import jax
+    return jax.default_backend() == "tpu"
+
+
+def pick_blocks(kind: str, n: int, d: int, dtype=None, *,
+                block_r: Optional[int] = None,
+                block_d: Optional[int] = None,
+                bench: Optional[Callable[[int, int], float]] = None,
+                ) -> Tuple[int, int]:
+    """Tile shape for an (n, d) row kernel: explicit args win, then the
+    `set_block_override` / env overrides, then the measured cache, then
+    the heuristic.  ``bench(block_r, block_d) -> seconds`` enables the
+    measured path (see module docstring for the mode switch); results are
+    cached per (kind, n, d, dtype, backend)."""
+    br = block_r if block_r is not None else \
+        _OVERRIDE["block_r"] if _OVERRIDE["block_r"] is not None else \
+        _env_int("REPRO_BLOCK_R")
+    bd = block_d if block_d is not None else \
+        _OVERRIDE["block_d"] if _OVERRIDE["block_d"] is not None else \
+        _env_int("REPRO_BLOCK_D")
+    bd = pick_block_d(d, bd if bd is not None else DEFAULT_BLOCK_D)
+    if br is not None:
+        return max(1, min(br, n)), bd
+
+    import jax
+    key = (kind, n, d, str(dtype), jax.default_backend(), bd)
+    if key in _TUNE_CACHE:
+        return _TUNE_CACHE[key]
+    if _measure_enabled(bench):
+        timed = []
+        for cand in _ROW_CANDIDATES:
+            if cand > max(1, n):
+                break
+            timed.append((bench(cand, bd), cand))
+        br = min(timed)[1] if timed else 1
+    else:
+        br = max(1, min(DEFAULT_BLOCK_R, n))
+    _TUNE_CACHE[key] = (br, bd)
+    return br, bd

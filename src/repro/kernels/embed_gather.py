@@ -2,11 +2,14 @@
 
 This is the read hot spot the paper's parameter manager serves (embedding /
 KGE / CTR rows).  TPU adaptation: instead of per-key RPCs, the gather is a
-scalar-prefetched blocked copy — the row ids live in SMEM (scalar prefetch),
-and the grid's index_map uses them to select which (1, block_d) tile of the
-HBM-resident table is staged into VMEM for each program instance.  The MXU
-is not involved; the kernel is bandwidth-bound by design, and block_d is
-sized so a tile is a multiple of the (8, 128) VREG lane layout.
+scalar-prefetched blocked copy — the row ids live in SMEM (scalar
+prefetch), the table stays HBM-resident (``memory_space=ANY``), and each
+grid program issues one guarded async DMA per row of its
+``(block_r, block_d)`` output tile.  Multi-row tiling shrinks the grid
+~block_r× versus the old one-row-per-program layout; the MXU is not
+involved; the kernel is bandwidth-bound by design, and block_d is a
+multiple of the (8, 128) VREG lane layout — non-aligned feature dims are
+padded up, never tiled down (`kernels.blocking`).
 """
 
 from __future__ import annotations
@@ -18,38 +21,67 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .blocking import pick_block_d
+from .blocking import pad_d, pick_blocks
 
 
-def _gather_kernel(ids_ref, table_ref, out_ref):
-    # The index_map already routed the right table row-tile into VMEM.
-    out_ref[...] = table_ref[...]
+def _gather_kernel(ids_ref, table_ref, out_ref, sem):
+    i, j = pl.program_id(0), pl.program_id(1)
+    block_r, block_d = out_ref.shape
+    n = ids_ref.shape[0]
+    for r in range(block_r):
+        row = i * block_r + r
+
+        @pl.when(row < n)
+        def _():
+            dma = pltpu.make_async_copy(
+                table_ref.at[ids_ref[row], pl.ds(j * block_d, block_d)],
+                out_ref.at[r], sem)
+            dma.start()
+            dma.wait()
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
-def embed_gather(table: jnp.ndarray, ids: jnp.ndarray, *,
-                 block_d: int = 512, interpret: bool = True) -> jnp.ndarray:
-    """Gather ``table[ids]``: table (V, D), ids (n,) int32 -> (n, D).
-
-    Grid: (n, D // block_d); program (i, j) copies tile
-    ``table[ids[i], j*block_d : (j+1)*block_d]`` via VMEM.
-    """
+@functools.partial(jax.jit,
+                   static_argnames=("block_r", "block_d", "interpret"))
+def _embed_gather(table, ids, block_r: int, block_d: int, interpret: bool):
     n = ids.shape[0]
     V, D = table.shape
-    block_d = pick_block_d(D, block_d)
-    grid = (n, D // block_d)
-
-    return pl.pallas_call(
+    dp = pad_d(D)
+    if dp != D:
+        table = jnp.pad(table, ((0, 0), (0, dp - D)))
+    grid = (-(-n // block_r), dp // block_d)
+    out = pl.pallas_call(
         _gather_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, block_d),
-                             lambda i, j, ids_ref: (ids_ref[i], j)),
-            ],
-            out_specs=pl.BlockSpec((1, block_d), lambda i, j, ids_ref: (i, j)),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)],
+            out_specs=pl.BlockSpec((block_r, block_d),
+                                   lambda i, j, ids_ref: (i, j)),
+            scratch_shapes=[pltpu.SemaphoreType.DMA],
         ),
-        out_shape=jax.ShapeDtypeStruct((n, D), table.dtype),
+        out_shape=jax.ShapeDtypeStruct((n, dp), table.dtype),
         interpret=interpret,
     )(ids.astype(jnp.int32), table)
+    return out if dp == D else out[:, :D]
+
+
+def embed_gather(table: jnp.ndarray, ids: jnp.ndarray, *,
+                 block_r: int | None = None, block_d: int | None = None,
+                 interpret: bool = True) -> jnp.ndarray:
+    """Gather ``table[ids]``: table (V, D), ids (n,) int32 -> (n, D).
+
+    Grid: (ceil(n / block_r), D' // block_d); program (i, j) DMA-copies
+    the j-tile of ``block_r`` table rows into its output tile."""
+    n = ids.shape[0]
+    D = table.shape[1]
+
+    def bench(br, bd):
+        from .blocking import probe_ids, time_bench
+        t = jnp.zeros(table.shape, table.dtype)
+        z = probe_ids(n, table.shape[0])
+        return time_bench(lambda: _embed_gather(t, z, br, bd, interpret))
+
+    br, bd = pick_blocks("gather", n, D, table.dtype, block_r=block_r,
+                         block_d=block_d, bench=bench)
+    return _embed_gather(table, ids, block_r=br, block_d=bd,
+                         interpret=interpret)

@@ -3,6 +3,12 @@
 On TPU the Pallas path compiles natively (``interpret=False``); everywhere
 else (this CPU container) the kernel body executes in interpret mode, and a
 pure-jnp fallback (`ref.py`) is available for speed-sensitive CPU callers.
+
+Index-side helpers: `sorted_slots` is the shared residual *producer* (one
+argsort -> a reusable `SortResidual`), and `segment_rows` / `unique_rows`
+are its consumers — pass them a precomputed residual (e.g. the managed
+step's `pm_forward.step_residual`) and they do no sorting at all, which is
+what keeps the whole train step at a single sort (DESIGN.md §11).
 """
 
 from __future__ import annotations
@@ -15,6 +21,7 @@ import jax.numpy as jnp
 from . import ref
 from .adagrad_rows import adagrad_row_update as _adagrad_pallas
 from .embed_gather import embed_gather as _gather_pallas
+from .pm_forward import SortResidual
 from .pm_forward import pm_combine as _combine_pallas
 from .scatter_rows import scatter_rows as _scatter_pallas
 
@@ -72,21 +79,28 @@ def scatter_rows(base, ids, rows, *, use_pallas: bool = True):
     return _scatter_pallas(base, ids, rows, interpret=not _on_tpu())
 
 
-def _sorted_slots(ids, n_slots: int):
-    """Shared id-compaction: sort, flag first-of-group, cumsum to dense
-    slot indices (clipped into n_slots).  Returns (order, s_ids, slot)."""
+def sorted_slots(ids, n_slots: int,
+                 residual: SortResidual | None = None) -> SortResidual:
+    """Shared id-compaction residual: sort, flag first-of-group, cumsum to
+    dense slot indices (clipped into n_slots).  THE residual producer —
+    `segment_rows` / `unique_rows` consume its output, and a caller that
+    already holds a step residual (`pm_forward.step_residual`) passes it
+    through so no second sort is ever issued."""
+    if residual is not None:
+        return SortResidual(residual.order, residual.sorted_ids,
+                            jnp.minimum(residual.slot, n_slots - 1))
     ids = ids.astype(jnp.int32)
-    order = jnp.argsort(ids)
+    order = jnp.argsort(ids).astype(jnp.int32)
     s_ids = ids[order]
     is_new = jnp.concatenate(
         [jnp.ones((1,), jnp.int32),
          (s_ids[1:] != s_ids[:-1]).astype(jnp.int32)])
-    slot = jnp.minimum(jnp.cumsum(is_new) - 1, n_slots - 1)
-    return order, s_ids, slot
+    slot = jnp.minimum(jnp.cumsum(is_new) - 1, n_slots - 1).astype(jnp.int32)
+    return SortResidual(order, s_ids, slot)
 
 
 @functools.partial(jax.jit, static_argnames=("n_slots",))
-def segment_rows(ids, grads, n_slots: int, pad_id=0):
+def segment_rows(ids, grads, n_slots: int, pad_id=0, residual=None):
     """Aggregate duplicate row ids: returns (slot_ids (n_slots,), summed
     grads (n_slots, D)).  Unused slots get id ``pad_id`` (default 0) with an
     all-zero gradient (a zero AdaGrad update is NOT a no-op — accum would
@@ -94,9 +108,12 @@ def segment_rows(ids, grads, n_slots: int, pad_id=0):
     sentinel ``pad_id`` (e.g. the vocab size) lets scatter callers route pad
     slots to a trash row instead.
 
+    ``residual``: a precomputed `SortResidual` for these ids (the managed
+    step's single sort) — aggregation then runs sort-free.
+
     Static-shape friendly: n_slots >= number of distinct ids expected.
     """
-    order, s_ids, slot = _sorted_slots(ids, n_slots)
+    order, s_ids, slot = sorted_slots(ids, n_slots, residual)
     s_g = grads[order]
     out_g = jnp.zeros((n_slots, grads.shape[1]), dtype=jnp.float32)
     out_g = out_g.at[slot].add(s_g.astype(jnp.float32))
@@ -107,9 +124,10 @@ def segment_rows(ids, grads, n_slots: int, pad_id=0):
 
 
 @functools.partial(jax.jit, static_argnames=("n_slots",))
-def unique_rows(ids, n_slots: int, pad_id=0):
+def unique_rows(ids, n_slots: int, pad_id=0, residual=None):
     """Unique ids compacted into ``n_slots`` slots (unused slots keep
     ``pad_id``) — the id-only fast path of `segment_rows` for callers that
-    already hold aggregated gradients (e.g. a dense autodiff grad)."""
-    _, s_ids, slot = _sorted_slots(ids, n_slots)
+    already hold aggregated gradients (e.g. a dense autodiff grad).
+    ``residual`` reuses a precomputed sort, as in `segment_rows`."""
+    _, s_ids, slot = sorted_slots(ids, n_slots, residual)
     return jnp.full((n_slots,), jnp.int32(pad_id)).at[slot].set(s_ids)

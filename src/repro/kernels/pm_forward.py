@@ -1,6 +1,7 @@
-"""Pallas TPU kernels: the fused intent-managed embedding forward path.
+"""Pallas TPU kernels + index residuals: the fused intent-managed
+embedding forward path.
 
-The managed lookup (DESIGN.md §3c) is a three-stage pipeline:
+The managed lookup (DESIGN.md §3c, §11) is a three-stage pipeline:
 
   probe   : binary-search every token against the sorted replica-cache ids;
   compact : deduplicate the missed ids and compact them into the planner's
@@ -11,15 +12,28 @@ The managed lookup (DESIGN.md §3c) is a three-stage pipeline:
             and the per-token select between cache row and miss-buffer row
             is the `pm_combine` kernel below.
 
-The probe/compact stage is pure int32 index arithmetic over (T,) vectors —
-it runs on the scalar path and its outputs feed the kernels' scalar-prefetch
-operands (`PrefetchScalarGridSpec`), exactly the pattern `embed_gather`
-uses: indices live in SMEM, index_maps route the right (1, block_d) row
-tiles of HBM-resident sources into VMEM.  The row data-path — the part that
-is bandwidth-bound — never touches a dense (T, D) table gather: hits read
-the replicated cache, misses read the compact (M+1, D) buffer (on TPU the
-buffer is what the masked partial-sum all-reduce moves; slot M is the
-all-zeros overflow/trash row).
+Single-sort step residual (§11): the probe/compact stage used to be
+re-derived by every consumer — the forward compaction, the backward
+`segment_rows` pre-sum and the fused sparse-optimizer row dedup each ran
+their own O(T log T) argsort over the same token ids.  `step_residual`
+now computes everything a managed train/serve step needs from ONE argsort:
+
+  * the ProbeCompact fields (hit flags, cache slots, unique-miss buffer);
+  * the full-token sort permutation + per-token unique-group slot
+    (`SortResidual`) that `ops.segment_rows` / `ops.unique_rows` consume
+    instead of re-sorting.
+
+The arithmetic lives in `_compact_math`, written once against a tiny
+numpy/jnp shim so the device path and the serving runtime's host-side
+admission probe (`pm.embedding.probe_host`) are literally the same code.
+
+The row data-path — the part that is bandwidth-bound — never touches a
+dense (T, D) table gather: hits read the replicated cache, misses read
+the compact (M+1, D) buffer (slot M is the all-zeros overflow/trash row).
+`pm_combine` moves it in (block_r, block_d) multi-row tiles: row indices
+are scalar-prefetched into SMEM and each grid program issues one guarded
+DMA per row — only the *winning* source row (cache or buffer) is staged
+into VMEM, half the bytes of the old stage-both layout.
 """
 
 from __future__ import annotations
@@ -33,14 +47,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .blocking import pick_block_d
-
-# any real token id is a vocab row index < 2**31 - 1.  numpy scalar on
-# purpose: a module-level jnp constant would create a device array at
-# import time and freeze the backend's device count before test/launch
-# entry points get to set XLA_FLAGS (e.g. the forced host-device counts
-# of tests/test_dryrun.py and the mesh CI job).
-_SENTINEL = np.int32(2 ** 31 - 1)
+from .blocking import pad_d, pick_blocks
 
 
 class ProbeCompact(NamedTuple):
@@ -54,77 +61,197 @@ class ProbeCompact(NamedTuple):
     overflow: jnp.ndarray    # (T,) bool, unique misses beyond capacity M
 
 
-def probe_and_compact(cache_ids: jnp.ndarray, tok: jnp.ndarray,
-                      miss_capacity: int) -> ProbeCompact:
-    """Probe (T,) tokens against the sorted cache and compact the *unique*
-    missed ids into ``miss_capacity`` buffer slots.
+class SortResidual(NamedTuple):
+    """The reusable product of one token-id argsort: enough to aggregate
+    duplicate rows (`ops.segment_rows`) or compact unique ids
+    (`ops.unique_rows`) without sorting again."""
 
-    Deduplication is load-bearing: the planner's `intent_miss_bound` counts
-    unique ids per step, so duplicate missed tokens must share one slot for
-    the static capacity to be exact (each duplicate consuming its own slot
-    silently overflowed the bound; see ISSUE 2)."""
+    order: jnp.ndarray       # (T,) int32 argsort permutation of the ids
+    sorted_ids: jnp.ndarray  # (T,) int32 ids[order]
+    slot: jnp.ndarray        # (T,) int32 unique-group index per sorted pos
+
+
+class StepResidual(NamedTuple):
+    """Everything a managed step derives from its token ids, computed from
+    a single argsort: the probe/compact index stage (forward) plus the
+    full-token sort residual (backward pre-sum + sparse optimizer)."""
+
+    probe: ProbeCompact
+    sort: SortResidual
+    n_uniq: jnp.ndarray      # () int32 unique token ids in the step
+
+
+def _jnp_scatter_set(dst, idx, val):
+    return dst.at[idx].set(val)
+
+
+def _np_scatter_set(dst, idx, val):
+    dst[idx] = val
+    return dst
+
+
+def _compact_math(xp, scatter_set, cache_ids, tok, miss_capacity: int):
+    """THE probe/compact/segment arithmetic, once, for numpy and jnp.
+
+    One argsort of the raw token ids orders every duplicate group; hits
+    are identified independently by binary search, so the same sorted
+    view yields (a) the unique *missed* ids in ascending order — each
+    claims one dense buffer slot, duplicates share it, overflow beyond
+    ``miss_capacity`` routes to the trash slot M — and (b) the unique-id
+    compaction over ALL tokens that the backward/optimizer reuse.
+
+    Deduplication is load-bearing: the planner's `intent_miss_bound`
+    counts unique ids per step, so duplicate missed tokens must share one
+    slot for the static capacity to be exact (see ISSUE 2)."""
     M = miss_capacity
     T = tok.shape[0]
-    slot = jnp.searchsorted(cache_ids, tok)
-    slot = jnp.clip(slot, 0, cache_ids.shape[0] - 1).astype(jnp.int32)
-    hit = cache_ids[slot] == tok
+    C = cache_ids.shape[0]
+    int32 = xp.int32
+    if C:
+        cache_slot = xp.clip(xp.searchsorted(cache_ids, tok),
+                             0, C - 1).astype(int32)
+        hit = cache_ids[cache_slot] == tok
+    else:
+        cache_slot = xp.zeros((T,), int32)
+        hit = xp.zeros((T,), bool)
 
-    # sort the missed ids to the front (sentinel sorts hits to the back);
-    # first-of-group flags give each unique missed id one dense slot
-    miss_tok = jnp.where(hit, _SENTINEL, tok)
-    order = jnp.argsort(miss_tok)            # stable
-    s = miss_tok[order]
-    valid = s != _SENTINEL
-    first = valid & jnp.concatenate(
-        [jnp.ones((1,), bool), s[1:] != s[:-1]])
-    grp = jnp.cumsum(first.astype(jnp.int32)) - 1   # unique index per token
-    n_miss = jnp.sum(first.astype(jnp.int32))
-
-    in_buf = first & (grp < M)
-    buf_ids = jnp.zeros((M + 1,), jnp.int32).at[
-        jnp.where(in_buf, grp, M)].set(jnp.where(in_buf, s, 0))[:M]
-    slot_sorted = jnp.where(valid & (grp < M), grp, M).astype(jnp.int32)
-    buf_slot = jnp.zeros((T,), jnp.int32).at[order].set(slot_sorted)
-    over_sorted = valid & (grp >= M)
-    overflow = jnp.zeros((T,), bool).at[order].set(over_sorted)
-    return ProbeCompact(hit, slot, buf_ids, buf_slot, n_miss, overflow)
-
-
-def _combine_kernel(hit_ref, slot_ref, pos_ref, cache_ref, buf_ref, out_ref):
-    # index_maps already staged the token's cache row tile and miss-buffer
-    # row tile into VMEM; the scalar hit flag picks the winner.
-    i = pl.program_id(0)
-    out_ref[...] = jnp.where(hit_ref[i] != 0, cache_ref[...], buf_ref[...])
+    order = xp.argsort(tok).astype(int32)        # THE step's one sort
+    s = tok[order]
+    hs = hit[order]
+    first = xp.concatenate([xp.ones((1,), bool), s[1:] != s[:-1]])
+    # unique-id compaction over all tokens (backward/optimizer residual)
+    seg_slot = (xp.cumsum(first.astype(int32)) - 1).astype(int32)
+    n_uniq = xp.sum(first.astype(int32))
+    # unique MISSED ids claim dense buffer slots in ascending-id order
+    # (hit status is constant within a duplicate group)
+    miss_first = first & ~hs
+    mgrp = (xp.cumsum(miss_first.astype(int32)) - 1).astype(int32)
+    n_miss = xp.sum(miss_first.astype(int32))
+    in_buf = miss_first & (mgrp < M)
+    buf_ids = scatter_set(xp.zeros((M + 1,), int32),
+                          xp.where(in_buf, mgrp, M),
+                          xp.where(in_buf, s, 0).astype(int32))[:M]
+    slot_sorted = xp.where(~hs & (mgrp < M), mgrp, M).astype(int32)
+    buf_slot = scatter_set(xp.zeros((T,), int32), order, slot_sorted)
+    over_sorted = ~hs & (mgrp >= M)
+    overflow = scatter_set(xp.zeros((T,), bool), order, over_sorted)
+    return dict(hit=hit, cache_slot=cache_slot, buf_ids=buf_ids,
+                buf_slot=buf_slot, n_miss=n_miss, overflow=overflow,
+                order=order, sorted_ids=s.astype(int32), seg_slot=seg_slot,
+                n_uniq=n_uniq)
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
-def pm_combine(hit: jnp.ndarray, cache_slot: jnp.ndarray,
-               buf_slot: jnp.ndarray, cache_rows: jnp.ndarray,
-               buf_rows: jnp.ndarray, *, block_d: int = 512,
-               interpret: bool = True) -> jnp.ndarray:
-    """Per-token select: out[i] = cache_rows[cache_slot[i]] on hit else
-    buf_rows[buf_slot[i]].  cache_rows (C, D); buf_rows (M+1, D) with the
-    trash row last; returns (T, D)."""
+@functools.partial(jax.jit, static_argnames=("miss_capacity",))
+def step_residual(cache_ids: jnp.ndarray, tok: jnp.ndarray,
+                  miss_capacity: int) -> StepResidual:
+    """Probe (T,) tokens against the sorted cache and derive the FULL step
+    residual — probe/compact index stage plus the reusable sort — from a
+    single argsort.  Compute once per managed step; every other consumer
+    (backward pre-sum, sparse row optimizer, kernel scalar prefetch) reads
+    these arrays instead of re-sorting."""
+    r = _compact_math(jnp, _jnp_scatter_set, cache_ids,
+                      tok.astype(jnp.int32), miss_capacity)
+    return StepResidual(
+        probe=ProbeCompact(r["hit"], r["cache_slot"], r["buf_ids"],
+                           r["buf_slot"], r["n_miss"], r["overflow"]),
+        sort=SortResidual(r["order"], r["sorted_ids"], r["seg_slot"]),
+        n_uniq=r["n_uniq"])
+
+
+def probe_and_compact(cache_ids: jnp.ndarray, tok: jnp.ndarray,
+                      miss_capacity: int) -> ProbeCompact:
+    """Index-stage-only view of `step_residual` (serving probes and other
+    callers that do not need the backward/optimizer sort residual)."""
+    return step_residual(cache_ids, tok, miss_capacity).probe
+
+
+def host_compact(cache_ids: np.ndarray, tok: np.ndarray,
+                 miss_capacity: int) -> dict:
+    """Numpy twin of `step_residual` for host-side admission probes — the
+    SAME `_compact_math`, so device and host can never drift apart."""
+    return _compact_math(np, _np_scatter_set, np.asarray(cache_ids),
+                         np.asarray(tok, dtype=np.int32), miss_capacity)
+
+
+# ------------------------------------------------------------- pm_combine
+
+def _combine_kernel(hit_ref, cslot_ref, bslot_ref, cache_ref, buf_ref,
+                    out_ref, sem):
+    # multi-row tile: one guarded DMA per row, and only the WINNING source
+    # row (cache on hit, miss buffer otherwise) ever moves into VMEM
+    i, j = pl.program_id(0), pl.program_id(1)
+    block_r, block_d = out_ref.shape
+    T = hit_ref.shape[0]
+    for r in range(block_r):
+        row = i * block_r + r
+
+        @pl.when(row < T)
+        def _():
+            hit = hit_ref[row] != 0
+
+            @pl.when(hit)
+            def _():
+                dma = pltpu.make_async_copy(
+                    cache_ref.at[cslot_ref[row],
+                                 pl.ds(j * block_d, block_d)],
+                    out_ref.at[r], sem)
+                dma.start()
+                dma.wait()
+
+            @pl.when(jnp.logical_not(hit))
+            def _():
+                dma = pltpu.make_async_copy(
+                    buf_ref.at[bslot_ref[row],
+                               pl.ds(j * block_d, block_d)],
+                    out_ref.at[r], sem)
+                dma.start()
+                dma.wait()
+
+
+def _pad_cols(x, dp):
+    d = x.shape[-1]
+    return x if d == dp else jnp.pad(x, ((0, 0), (0, dp - d)))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_r", "block_d", "interpret"))
+def _pm_combine(hit, cache_slot, buf_slot, cache_rows, buf_rows,
+                block_r: int, block_d: int, interpret: bool):
     T = hit.shape[0]
     D = cache_rows.shape[1]
-    block_d = pick_block_d(D, block_d)
-    grid = (T, D // block_d)
-
-    return pl.pallas_call(
+    dp = pad_d(D)
+    grid = (-(-T // block_r), dp // block_d)
+    out = pl.pallas_call(
         _combine_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, block_d),
-                             lambda i, j, h, s, p: (s[i], j)),   # cache
-                pl.BlockSpec((1, block_d),
-                             lambda i, j, h, s, p: (p[i], j)),   # buffer
+                pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+                pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
             ],
-            out_specs=pl.BlockSpec((1, block_d),
+            out_specs=pl.BlockSpec((block_r, block_d),
                                    lambda i, j, h, s, p: (i, j)),
+            scratch_shapes=[pltpu.SemaphoreType.DMA],
         ),
-        out_shape=jax.ShapeDtypeStruct((T, D), cache_rows.dtype),
+        out_shape=jax.ShapeDtypeStruct((T, dp), cache_rows.dtype),
         interpret=interpret,
     )(hit.astype(jnp.int32), cache_slot.astype(jnp.int32),
-      buf_slot.astype(jnp.int32), cache_rows, buf_rows)
+      buf_slot.astype(jnp.int32), _pad_cols(cache_rows, dp),
+      _pad_cols(buf_rows, dp))
+    return out if dp == D else out[:, :D]
+
+
+def pm_combine(hit: jnp.ndarray, cache_slot: jnp.ndarray,
+               buf_slot: jnp.ndarray, cache_rows: jnp.ndarray,
+               buf_rows: jnp.ndarray, *, block_r: int | None = None,
+               block_d: int | None = None,
+               interpret: bool = True) -> jnp.ndarray:
+    """Per-token select: out[i] = cache_rows[cache_slot[i]] on hit else
+    buf_rows[buf_slot[i]].  cache_rows (C, D); buf_rows (M+1, D) with the
+    trash row last; returns (T, D).  Tiled (block_r, block_d); the feature
+    dim is lane-padded, never shrunk (`kernels.blocking`)."""
+    br, bd = pick_blocks("pm_combine", hit.shape[0], cache_rows.shape[1],
+                         cache_rows.dtype, block_r=block_r, block_d=block_d)
+    return _pm_combine(hit, cache_slot, buf_slot, cache_rows, buf_rows,
+                       block_r=br, block_d=bd, interpret=interpret)

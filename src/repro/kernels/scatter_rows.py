@@ -2,12 +2,15 @@
 owner-sharded table gradient.
 
 Backward of the managed lookup: duplicate token gradients are pre-summed
-(`ops.segment_rows`, one compact (n, D) buffer), then this kernel writes
-each aggregated row into its table slot — a scalar-prefetched blocked
-scatter with input/output aliasing, so the dense (V, D) gradient is the
-donated zero buffer and only the touched row tiles ever move through VMEM.
+(`ops.segment_rows` fed by the step's sort residual — no extra sort), then
+this kernel writes each aggregated row into its table slot.  The dense
+(V, D) gradient is the donated zero buffer (``memory_space=ANY`` +
+input/output aliasing, in-place on TPU) and only the touched row tiles
+ever move: each grid program issues one guarded VMEM->HBM DMA per row of
+its ``(block_r, block_d)`` gradient tile (multi-row tiling, ~block_r×
+fewer grid programs than the old one-row layout).
 
-Rows ids must be unique; pad slots point at a caller-provided trash row
+Row ids must be unique; pad slots point at a caller-provided trash row
 (the managed path uses row V of a (V+1, D) buffer, sliced off afterwards),
 so colliding pad writes are harmless last-wins zeros.
 """
@@ -21,39 +24,72 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .blocking import pick_block_d
+from .blocking import pad_d, pick_blocks
 
 
-def _scatter_kernel(ids_ref, base_ref, rows_ref, out_ref):
-    # index_map routed out tile (ids[i], j); pure blocked row write.
-    out_ref[...] = rows_ref[...]
+def _scatter_kernel(ids_ref, base_ref, rows_ref, out_ref, sem):
+    i, j = pl.program_id(0), pl.program_id(1)
+    block_r, block_d = rows_ref.shape
+    n = ids_ref.shape[0]
+    for r in range(block_r):
+        row = i * block_r + r
+
+        @pl.when(row < n)
+        def _():
+            dma = pltpu.make_async_copy(
+                rows_ref.at[r],
+                out_ref.at[ids_ref[row], pl.ds(j * block_d, block_d)], sem)
+            dma.start()
+            dma.wait()
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
-def scatter_rows(base: jnp.ndarray, ids: jnp.ndarray, rows: jnp.ndarray, *,
-                 block_d: int = 512, interpret: bool = True) -> jnp.ndarray:
-    """out = base with out[ids[i]] = rows[i]; base (R, D) is donated
-    (in-place on TPU), ids (n,) int32 unique row indices, rows (n, D)."""
+@functools.partial(jax.jit,
+                   static_argnames=("block_r", "block_d", "interpret"))
+def _scatter_rows(base, ids, rows, block_r: int, block_d: int,
+                  interpret: bool):
     n = ids.shape[0]
     R, D = base.shape
-    block_d = pick_block_d(D, block_d)
-    grid = (n, D // block_d)
-
-    return pl.pallas_call(
+    dp = pad_d(D)
+    if dp != D:
+        base = jnp.pad(base, ((0, 0), (0, dp - D)))
+        rows = jnp.pad(rows, ((0, 0), (0, dp - D)))
+    grid = (-(-n // block_r), dp // block_d)
+    out = pl.pallas_call(
         _scatter_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, block_d),
-                             lambda i, j, ids_ref: (ids_ref[i], j)),  # base
-                pl.BlockSpec((1, block_d),
+                pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),  # base
+                pl.BlockSpec((block_r, block_d),
                              lambda i, j, ids_ref: (i, j)),           # rows
             ],
-            out_specs=pl.BlockSpec((1, block_d),
-                                   lambda i, j, ids_ref: (ids_ref[i], j)),
+            out_specs=pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+            scratch_shapes=[pltpu.SemaphoreType.DMA],
         ),
-        out_shape=jax.ShapeDtypeStruct((R, D), base.dtype),
+        out_shape=jax.ShapeDtypeStruct((R, dp), base.dtype),
         input_output_aliases={1: 0},
         interpret=interpret,
     )(ids.astype(jnp.int32), base, rows.astype(base.dtype))
+    return out if dp == D else out[:, :D]
+
+
+def scatter_rows(base: jnp.ndarray, ids: jnp.ndarray, rows: jnp.ndarray, *,
+                 block_r: int | None = None, block_d: int | None = None,
+                 interpret: bool = True) -> jnp.ndarray:
+    """out = base with out[ids[i]] = rows[i]; base (R, D) is donated
+    (in-place on TPU), ids (n,) int32 unique row indices, rows (n, D)."""
+    n = ids.shape[0]
+    D = base.shape[1]
+
+    def bench(br, bd):
+        from .blocking import probe_ids, time_bench
+        b = jnp.zeros(base.shape, base.dtype)
+        z = probe_ids(n, base.shape[0])
+        g = jnp.zeros(rows.shape, rows.dtype)
+        return time_bench(lambda: _scatter_rows(b, z, g, br, bd, interpret))
+
+    br, bd = pick_blocks("scatter", n, D, base.dtype, block_r=block_r,
+                         block_d=block_d, bench=bench)
+    return _scatter_rows(base, ids, rows, block_r=br, block_d=bd,
+                         interpret=interpret)

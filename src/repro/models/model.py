@@ -427,7 +427,8 @@ def forward(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
             cache: Optional[Params] = None, remat: bool = True,
             remat_policy: str = "full",
             pm_miss_capacity: int = 0, pm_strict: bool = False,
-            pm_kernel: bool = False, pm_backend=None,
+            pm_kernel: bool = False, pm_backend=None, pm_residual=None,
+            embed_rows=None,
             head_last_only: bool = False, skip_head: bool = False,
             fsdp_spec=None, act_spec=None):
     """Returns (logits, aux_loss, new_cache).
@@ -439,14 +440,23 @@ def forward(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
       frames     (B, n_frames, D)                      [encdec only]
       pm_cache_ids / pm_cache_rows : intent-managed embedding replica
         cache (repro.pm); active when ``pm_miss_capacity > 0``.
+
+    ``pm_residual``: precomputed single-sort step residual for the managed
+    lookup (`kernels.pm_forward.step_residual` — the train step computes
+    it once and every index consumer reuses it).  ``embed_rows``: already-
+    gathered (B, S, D) token rows; skips the embedding lookup entirely
+    (the fused sparse train step differentiates w.r.t. these rows instead
+    of a dense table gradient).
     """
     tokens = batch["tokens"]
     B, S = tokens.shape
-    if pm_miss_capacity > 0 and "pm_cache_ids" in batch:
+    if embed_rows is not None:
+        h = embed_rows
+    elif pm_miss_capacity > 0 and "pm_cache_ids" in batch:
         from repro.pm.embedding import pm_lookup
         h = pm_lookup(params["embed"], batch["pm_cache_ids"],
                       batch["pm_cache_rows"], tokens, pm_miss_capacity,
-                      pm_strict, pm_kernel, pm_backend)
+                      pm_strict, pm_kernel, pm_backend, pm_residual)
     else:
         h = jnp.take(params["embed"], tokens, axis=0)
     if cfg.family == "vlm" and "img_embeds" in batch:

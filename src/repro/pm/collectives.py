@@ -88,16 +88,26 @@ class EmulatedBackend:
         return partial
 
     def scatter_row_grads(self, tok, g, vocab_size: int, *,
-                          kernel: bool = False):
+                          kernel: bool = False, segmented: bool = False):
         """Route all row gradients to the (conceptually owner-sharded)
-        table: dense scatter-add, or — ``kernel`` — duplicate pre-sum into
-        compact slots followed by one blocked Pallas scatter (pad slots hit
-        the sentinel trash row V)."""
+        table: dense scatter-add, or — ``kernel`` — compact unique slots
+        followed by one blocked Pallas scatter (pad slots hit the sentinel
+        trash row V).  ``segmented`` marks (tok, g) as ALREADY
+        duplicate-pre-summed compact slots (the lookup backward feeds the
+        forward's sort residual through `ops.segment_rows`), so no index
+        work happens here."""
         V = vocab_size
         if not kernel:
-            return jnp.zeros((V, g.shape[1]), dtype=g.dtype).at[tok].add(g)
-        slot_ids, slot_g = ops.segment_rows(tok, g, n_slots=tok.shape[0],
-                                            pad_id=V)
+            # pad/sentinel ids (== V, only present on segmented inputs)
+            # fall outside the table and are dropped
+            return jnp.zeros((V, g.shape[1]),
+                             dtype=g.dtype).at[tok].add(g, mode="drop")
+        if segmented:
+            slot_ids, slot_g = tok, g
+        else:
+            slot_ids, slot_g = ops.segment_rows(tok, g,
+                                                n_slots=tok.shape[0],
+                                                pad_id=V)
         base = jnp.zeros((V + 1, g.shape[1]), dtype=g.dtype)
         return ops.scatter_rows(base, slot_ids, slot_g)[:V]
 
@@ -168,14 +178,20 @@ class MeshBackend:
             check_rep=False)(table, ids)
 
     def scatter_row_grads(self, tok, g, vocab_size: int, *,
-                          kernel: bool = False):
+                          kernel: bool = False, segmented: bool = False):
         """psum_scatter-routed row gradients: tokens are chunked over the
         mesh axis, each shard scatter-adds its chunk into a local ``(V, D)``
-        partial — with ``kernel``, duplicates are pre-summed into compact
-        slots by `segment_rows` first — and one tiled `lax.psum_scatter`
-        both sums the partials and delivers each owner shard exactly its
-        ``(V/n, D)`` block (n-fold less wire than a psum of the full
-        gradient).  Pad/chunk-pad tokens carry id V and are dropped."""
+        partial, and one tiled `lax.psum_scatter` both sums the partials
+        and delivers each owner shard exactly its ``(V/n, D)`` block
+        (n-fold less wire than a psum of the full gradient).
+
+        ``segmented`` inputs are already duplicate-pre-summed compact
+        slots — the lookup backward's single global `segment_rows` pass
+        over the forward's sort residual — so the chunks (disjoint unique
+        ids) go straight into the partial: the per-chunk pre-sum that used
+        to run one sort per shard inside the shard_map is batched into
+        that one residual-fed pass.  Pad/chunk-pad tokens carry id V and
+        are dropped."""
         V = vocab_size
         n = self.n_shards
         self._check(V)
@@ -191,7 +207,7 @@ class MeshBackend:
             i = jax.lax.axis_index(self.axis)
             tc = jax.lax.dynamic_slice_in_dim(tokp, i * cap, cap)
             gc = jax.lax.dynamic_slice_in_dim(gp, i * cap, cap, axis=0)
-            if kernel:
+            if kernel and not segmented:
                 tc, gc = ops.segment_rows(tc, gc, n_slots=cap, pad_id=V)
                 gc = gc.astype(gp.dtype)
             partial = jnp.zeros((V, D), gp.dtype).at[tc].add(gc,

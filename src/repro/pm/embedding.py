@@ -47,7 +47,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
-from repro.kernels.pm_forward import probe_and_compact
+from repro.kernels.pm_forward import (StepResidual, host_compact,
+                                      probe_and_compact, step_residual)
 from repro.pm.collectives import resolve
 
 
@@ -95,7 +96,8 @@ def combine_miss_buffer(backend, table, cache_rows, hit, cache_slot,
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
 def pm_lookup(table, cache_ids, cache_rows, tokens, miss_capacity: int,
-              strict: bool = False, kernel: bool = False, backend=None):
+              strict: bool = False, kernel: bool = False, backend=None,
+              residual: StepResidual | None = None):
     """Intent-managed embedding lookup (training mode, differentiable).
 
     table (V, D); cache_ids (C,) sorted; cache_rows (C, D); tokens (B, S).
@@ -110,21 +112,32 @@ def pm_lookup(table, cache_ids, cache_rows, tokens, miss_capacity: int,
     combine forward, blocked row scatter backward); the default jnp path is
     the bitwise reference.  ``backend`` selects the collective substrate
     (`pm.collectives`; None = single-device emulated reference).
+
+    ``residual``: a precomputed `pm_forward.step_residual` for these
+    (cache_ids, tokens) — the single-sort step contract (DESIGN.md §11):
+    the train step computes the residual once and the forward compaction,
+    the backward pre-sum AND the fused optimizer all consume it.  Left
+    None, the lookup derives it here (still one sort: the forward's
+    residual is saved for the backward, which never re-sorts).
     """
     out, _ = _pm_lookup_fwd(table, cache_ids, cache_rows, tokens,
-                            miss_capacity, strict, kernel, backend)
+                            miss_capacity, strict, kernel, backend,
+                            residual)
     return out
 
 
 def _lookup_impl(table, cache_ids, cache_rows, tokens, miss_capacity,
-                 strict=False, kernel=False, backend=None):
+                 strict=False, kernel=False, backend=None, residual=None):
     B, S = tokens.shape
     T = B * S
     M = min(miss_capacity, T)
     tok = tokens.reshape(T).astype(jnp.int32)
     # probe + dedup/compact: UNIQUE missed ids fill the M intent-planned
-    # slots (duplicates share a slot, matching `intent_miss_bound`)
-    pc = probe_and_compact(cache_ids, tok, M)
+    # slots (duplicates share a slot, matching `intent_miss_bound`);
+    # computed from the step's one sort, or reused from the caller's
+    if residual is None:
+        residual = step_residual(cache_ids, tok, M)
+    pc = residual.probe
     out = combine_miss_buffer(backend, table, cache_rows, pc.hit,
                               pc.cache_slot, pc.buf_ids, pc.buf_slot,
                               kernel=kernel)
@@ -139,27 +152,39 @@ def _lookup_impl(table, cache_ids, cache_rows, tokens, miss_capacity,
         # planner-guaranteed capacity) omits the branch entirely so no
         # conditional dense collective is lowered.
         out = jax.lax.cond(pc.n_miss > M, with_overflow, lambda o: o, out)
-    return out.reshape(B, S, table.shape[1])
+    return out.reshape(B, S, table.shape[1]), residual
 
 
 def _pm_lookup_fwd(table, cache_ids, cache_rows, tokens, miss_capacity,
-                   strict=False, kernel=False, backend=None):
-    out = _lookup_impl(table, cache_ids, cache_rows, tokens, miss_capacity,
-                       strict, kernel, backend)
-    return out, (tokens, table.shape)
+                   strict=False, kernel=False, backend=None, residual=None):
+    out, residual = _lookup_impl(table, cache_ids, cache_rows, tokens,
+                                 miss_capacity, strict, kernel, backend,
+                                 residual)
+    # the sort residual rides to the backward so the duplicate pre-sum
+    # never re-sorts the tokens it already sorted in the forward
+    return out, (tokens, table.shape, residual.sort)
 
 
 def _pm_lookup_bwd(miss_capacity, strict, kernel, backend, res, g):
-    tokens, (V, D) = res
+    tokens, (V, D), srt = res
     B, S = tokens.shape
-    tok = tokens.reshape(B * S).astype(jnp.int32)
-    gt = g.reshape(B * S, D)
+    T = B * S
+    tok = tokens.reshape(T).astype(jnp.int32)
+    gt = g.reshape(T, D)
     # replica write-back: ALL row gradients go to the owner-sharded table
     # (on the mesh backend a psum_scatter routes each summed row to its
-    # owner's block; emulated = the dense/kernel scatter reference)
-    grad_table = resolve(backend).scatter_row_grads(tok, gt, V,
-                                                    kernel=kernel)
-    return (grad_table, None, None, None)
+    # owner's block; emulated = the dense/kernel scatter reference).  The
+    # kernel/mesh paths pre-sum duplicates into compact slots using the
+    # forward's sort residual — zero additional sorts.
+    be = resolve(backend)
+    if kernel or be.mesh_real:
+        seg_ids, seg_g = ops.segment_rows(tok, gt, n_slots=T, pad_id=V,
+                                          residual=srt)
+        grad_table = be.scatter_row_grads(seg_ids, seg_g.astype(gt.dtype),
+                                          V, kernel=kernel, segmented=True)
+    else:
+        grad_table = be.scatter_row_grads(tok, gt, V, kernel=False)
+    return (grad_table, None, None, None, None)
 
 
 pm_lookup.defvjp(_pm_lookup_fwd, _pm_lookup_bwd)
@@ -250,32 +275,16 @@ def probe_host(cache_ids, tok, miss_capacity: int) -> HostProbe:
     scalar-path/data-path split the Pallas kernels use (indices in SMEM
     via scalar prefetch, rows in VMEM), applied host-side; it also means
     miss-rate/overflow drift feedback needs no device readback at all.
-    Semantics are pinned to `probe_and_compact` by tests."""
-    cache_ids = np.asarray(cache_ids)
-    tok = np.asarray(tok)
-    M = miss_capacity
-    if len(cache_ids):
-        slot = np.searchsorted(cache_ids, tok)
-        slot = np.clip(slot, 0, len(cache_ids) - 1).astype(np.int32)
-        hit = cache_ids[slot] == tok
-    else:
-        slot = np.zeros(len(tok), np.int32)
-        hit = np.zeros(len(tok), bool)
-    uniq = np.unique(tok[~hit])
-    n_miss = len(uniq)
-    buf = uniq[:M]
-    if len(buf):
-        pos = np.searchsorted(buf, tok)
-        pos = np.clip(pos, 0, len(buf) - 1).astype(np.int32)
-        found = buf[pos] == tok
-    else:
-        pos = np.zeros(len(tok), np.int32)
-        found = np.zeros(len(tok), bool)
-    buf_slot = np.where(~hit & found, pos, M).astype(np.int32)
-    overflow = ~hit & ~found
-    buf_ids = np.zeros(M, np.int32)
-    buf_ids[: len(buf)] = buf
-    return HostProbe(hit, slot, buf_ids, buf_slot, overflow, n_miss)
+
+    There are no parallel implementations to pin against each other
+    anymore: this IS `pm_forward._compact_math` — the same arithmetic the
+    device `step_residual`/`probe_and_compact` runs, executed on numpy
+    (`pm_forward.host_compact`) — so host and device probes cannot drift
+    (the pin test now checks one implementation against itself on two
+    array backends)."""
+    r = host_compact(cache_ids, tok, miss_capacity)
+    return HostProbe(r["hit"], r["cache_slot"], r["buf_ids"],
+                     r["buf_slot"], r["overflow"], int(r["n_miss"]))
 
 
 def planned_serve_lookup(table, cache_rows, buf_ids, hit, cache_slot,

@@ -133,10 +133,17 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig) -> LoopResult:
 
     def step_fn(miss_capacity: int):
         if miss_capacity not in step_fns:
-            step_fns[miss_capacity] = jax.jit(make_train_step(
-                cfg, optimizer=lc.optimizer, lr=lc.lr,
-                pm_miss_capacity=miss_capacity, pm_kernel=lc.kernel,
-                pm_backend=backend))
+            # params + optimizer state are donated: the (V, D) table and
+            # its AdaGrad accumulator — the step's hot buffers — are
+            # updated in place instead of being copied every step (the
+            # loop rebinds both from the step's outputs, so the old
+            # buffers are dead the moment the call returns)
+            step_fns[miss_capacity] = jax.jit(
+                make_train_step(
+                    cfg, optimizer=lc.optimizer, lr=lc.lr,
+                    pm_miss_capacity=miss_capacity, pm_kernel=lc.kernel,
+                    pm_backend=backend),
+                donate_argnums=(0, 1))
         return step_fns[miss_capacity]
 
     plan: Optional[PlacementPlan] = None

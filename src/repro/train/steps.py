@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
+from repro.kernels.pm_forward import step_residual
 from repro.models.model import forward, loss_fn
 from repro.optim.optimizers import (AdaGradState, adagrad_init,
                                     adagrad_update, adam_init, adam_update)
@@ -30,6 +31,17 @@ def make_train_step(cfg: ModelConfig, *, optimizer: str = "adagrad",
     untied AdaGrad runs — applies the embedding update via the fused sparse
     row kernel on exactly the touched rows instead of a dense (V, D) sweep.
 
+    Single-sort step (DESIGN.md §11): the step computes ONE
+    `pm_forward.step_residual` from the batch tokens and every index
+    consumer — forward probe/compact, backward duplicate pre-sum, fused
+    sparse optimizer — reads it; no other sort is traced into the step.
+    On the fused path the loss is differentiated with respect to the
+    gathered token *rows* rather than the table, so the dense (V, D)
+    embedding gradient (zeros + scatter-add + gather) never materializes:
+    the compact (T, D) row grads go residual-fed segment -> AdaGrad row
+    kernel, and the table/accumulator buffers are donated end to end
+    (`train.loop` jits the step with ``donate_argnums=(0, 1)``).
+
     ``pm_backend``: the collective backend for the managed lookup
     (`repro.pm.collectives`; None = single-device emulated reference, a
     `MeshBackend` runs the real shard_map psum data path).
@@ -49,40 +61,66 @@ def make_train_step(cfg: ModelConfig, *, optimizer: str = "adagrad",
                     and optimizer == "adagrad" and not cfg.tie_embeddings
                     and not getattr(pm_backend, "mesh_real", False))
 
-    def train_step(params, opt_state, batch):
-        def loss(p):
-            if vp_loss_mesh is not None:
-                from repro.launch.mesh import batch_axes
-                from repro.models.losses import vocab_parallel_ce
-                h, aux, _ = forward(p, cfg, batch, remat=remat,
-                                    remat_policy=remat_policy,
-                                    pm_miss_capacity=pm_miss_capacity,
-                                    pm_strict=pm_strict, pm_kernel=pm_kernel,
-                                    pm_backend=pm_backend, skip_head=True,
-                                    fsdp_spec=fsdp_spec, act_spec=act_spec)
-                head = p["embed"].T if cfg.tie_embeddings else p["head"]
-                return vocab_parallel_ce(
-                    h, head, batch["labels"], vp_loss_mesh,
-                    batch_axes=batch_axes(vp_loss_mesh), aux=aux)
-            logits, aux, _ = forward(p, cfg, batch, remat=remat,
-                                     remat_policy=remat_policy,
-                                     pm_miss_capacity=pm_miss_capacity,
-                                     pm_strict=pm_strict, pm_kernel=pm_kernel,
-                                     pm_backend=pm_backend,
-                                     fsdp_spec=fsdp_spec,
-                                     act_spec=act_spec)
-            return loss_fn(logits, batch["labels"], aux)
+    def run_loss(p, batch, residual, embed_rows=None):
+        if vp_loss_mesh is not None:
+            from repro.launch.mesh import batch_axes
+            from repro.models.losses import vocab_parallel_ce
+            h, aux, _ = forward(p, cfg, batch, remat=remat,
+                                remat_policy=remat_policy,
+                                pm_miss_capacity=pm_miss_capacity,
+                                pm_strict=pm_strict, pm_kernel=pm_kernel,
+                                pm_backend=pm_backend, pm_residual=residual,
+                                embed_rows=embed_rows, skip_head=True,
+                                fsdp_spec=fsdp_spec, act_spec=act_spec)
+            head = p["embed"].T if cfg.tie_embeddings else p["head"]
+            return vocab_parallel_ce(
+                h, head, batch["labels"], vp_loss_mesh,
+                batch_axes=batch_axes(vp_loss_mesh), aux=aux)
+        logits, aux, _ = forward(p, cfg, batch, remat=remat,
+                                 remat_policy=remat_policy,
+                                 pm_miss_capacity=pm_miss_capacity,
+                                 pm_strict=pm_strict, pm_kernel=pm_kernel,
+                                 pm_backend=pm_backend, pm_residual=residual,
+                                 embed_rows=embed_rows,
+                                 fsdp_spec=fsdp_spec, act_spec=act_spec)
+        return loss_fn(logits, batch["labels"], aux)
 
-        loss_val, grads = jax.value_and_grad(loss)(params)
+    def train_step(params, opt_state, batch):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        T = B * S
+        tok = tokens.reshape(T).astype(jnp.int32)
+        pm_on = pm_miss_capacity > 0 and "pm_cache_ids" in batch
+        # THE step's one sort: probe/compact + full-token segmentation
+        residual = step_residual(batch["pm_cache_ids"], tok,
+                                 min(pm_miss_capacity, T)) if pm_on else None
+
         if not sparse_embed:
+            loss_val, grads = jax.value_and_grad(
+                lambda p: run_loss(p, batch, residual))(params)
             new_params, new_state = update(grads, opt_state, params, lr=lr)
             return loss_val, new_params, new_state
 
-        # dense update for everything but the managed table
+        # fused sparse path: gather the token rows ONCE up front, then
+        # differentiate the loss with respect to those rows — the lookup's
+        # VJP (and with it any dense (V, D) gradient buffer) is never
+        # invoked, and the compact (T, D) row grads flow residual-fed
+        # segment -> fused AdaGrad rows
+        emb = params["embed"]
         rest = {k: v for k, v in params.items() if k != "embed"}
-        rest_g = {k: v for k, v in grads.items() if k != "embed"}
+        if pm_on:
+            h0 = pm_lookup_rows(emb, batch, tokens, pm_miss_capacity,
+                                pm_strict, pm_kernel, pm_backend, residual)
+        else:
+            h0 = jnp.take(emb, tokens, axis=0)
+
+        loss_val, (g_rest, g_rows) = jax.value_and_grad(
+            lambda rp, h_in: run_loss(dict(rp, embed=emb), batch, residual,
+                                      embed_rows=h_in),
+            argnums=(0, 1))(rest, h0)
+
         rest_acc = {k: v for k, v in opt_state.accum.items() if k != "embed"}
-        new_rest, rest_state = adagrad_update(rest_g, AdaGradState(rest_acc),
+        new_rest, rest_state = adagrad_update(g_rest, AdaGradState(rest_acc),
                                               rest, lr=lr)
         # fused sparse AdaGrad on exactly the touched (unique) rows; pad
         # slots carry id 0 with a zero gradient.  The slot order is
@@ -91,19 +129,32 @@ def make_train_step(cfg: ModelConfig, *, optimizer: str = "adagrad",
         # executes in order, so the real update always lands last and a
         # trailing pad can never overwrite it with the stale row.
         V = cfg.vocab_size
-        tok = batch["tokens"].reshape(-1).astype(jnp.int32)
-        ids = ops.unique_rows(tok, n_slots=tok.shape[0], pad_id=V)[::-1]
+        gt = g_rows.reshape(T, emb.shape[1])
+        seg_ids, seg_g = ops.segment_rows(
+            tok, gt, n_slots=T, pad_id=V,
+            residual=residual.sort if residual is not None else None)
+        ids = seg_ids[::-1]
         valid = ids < V
         ids = jnp.where(valid, ids, 0)
-        rows_g = jnp.take(grads["embed"], ids, axis=0) \
-            * valid[:, None].astype(grads["embed"].dtype)
+        rows_g = seg_g[::-1] * valid[:, None].astype(seg_g.dtype)
         new_emb, new_acc = ops.adagrad_row_update(
-            params["embed"], opt_state.accum["embed"], ids, rows_g, lr=lr)
+            emb, opt_state.accum["embed"], ids, rows_g, lr=lr)
         new_params = dict(new_rest, embed=new_emb)
         new_state = AdaGradState(dict(rest_state.accum, embed=new_acc))
         return loss_val, new_params, new_state
 
     return train_step
+
+
+def pm_lookup_rows(emb, batch, tokens, pm_miss_capacity, pm_strict,
+                   pm_kernel, pm_backend, residual):
+    """The fused step's forward-only managed gather (differentiation
+    happens with respect to its output, not the table)."""
+    from repro.pm.embedding import pm_lookup
+    T = tokens.shape[0] * tokens.shape[1]
+    return pm_lookup(emb, batch["pm_cache_ids"], batch["pm_cache_rows"],
+                     tokens, min(pm_miss_capacity, T), pm_strict,
+                     pm_kernel, pm_backend, residual)
 
 
 def make_opt_init(optimizer: str = "adagrad") -> Callable:
