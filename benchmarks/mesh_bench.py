@@ -12,7 +12,17 @@ the psum while the plain vocab-parallel baseline moves every token's row
     plain dense lookup (`plain_serve_lookup` over the same mesh);
   * the wire story: rows through the collective, managed vs plain;
   * the training closure: fwd+bwd time of `pm_lookup` (psum forward,
-    psum_scatter backward) vs a dense lookup's gather/scatter.
+    psum_scatter backward) vs a dense lookup's gather/scatter;
+  * the ``fused`` arm (ISSUE 6): the routed fused managed step —
+    destination-compacted `all_to_all` miss gather + on-shard sparse
+    AdaGrad (`MeshBackend.gather_rows_routed` / `update_rows`, donated
+    buffers) — paired call-for-call against a faithful replica of the
+    PR-4 mesh step (replicated psum gather, dense ``(V, D)`` partial +
+    psum_scatter backward, dense optimizer sweep over the sharded
+    table).  Both sides run the pure-jnp row math: on this CPU container
+    interpret-mode Pallas timings are meaningless, and the jnp path
+    isolates exactly what the PR changed — collective layout and memory
+    traffic.
 
 Needs a multi-device host; when launched on a single-device one (e.g.
 from ``benchmarks.run``) it re-execs itself in a subprocess with
@@ -20,7 +30,17 @@ from ``benchmarks.run``) it re-execs itself in a subprocess with
 takes effect before jax initializes.  Writes ``BENCH_mesh.json`` at the
 repo root next to the other BENCH_* trajectories.
 
-CLI: ``python -m benchmarks.mesh_bench [--quick]``.
+CLI:
+  python -m benchmarks.mesh_bench [--quick]
+  python -m benchmarks.mesh_bench --check-baseline BENCH_mesh.json
+
+``--check-baseline`` is the CI regression guard for the fused arm: it
+re-measures the quick skews and FAILS (exit 1) if the fused step's
+median regressed more than 15% against the committed baseline.  The
+comparison is normalized through the paired legacy replica (current
+fused/legacy ratio vs the committed one), so absolute CPU-speed
+differences between CI hosts don't trip it while a real routed-path
+regression does.
 """
 
 from __future__ import annotations
@@ -42,6 +62,10 @@ V, D = 32768, 256
 B, K = 16, 256           # T = 4096 tokens per batch
 C = 4096                 # replica-cache capacity (holds the Zipf head)
 ITERS = 20
+FUSED_ITERS = 9          # paired-median iters of the fused-step arm
+SKEWS_FULL = (1.0, 1.1, 1.5)
+SKEWS_QUICK = (1.0, 1.1)
+REGRESSION_TOL = 1.15    # CI guard: >15% normalized regression fails
 
 
 def _rows(summary) -> List[str]:
@@ -58,6 +82,13 @@ def _rows(summary) -> List[str]:
              e["dense_rows"])
         emit(rows, "mesh", "managed", tag, "train_fwd_bwd_us",
              e["train_fwd_bwd_us"])
+    for e in summary.get("fused", {}).get("entries", []):
+        tag = f"zipf{e['zipf']}"
+        emit(rows, "mesh", "fused_step", tag, "legacy_us",
+             e["legacy_step_us"])
+        emit(rows, "mesh", "fused_step", tag, "fused_us",
+             e["fused_step_us"])
+        emit(rows, "mesh", "fused_step", tag, "speedup_x", e["speedup"])
     emit(rows, "mesh", "managed", "ALL", "managed_faster_at_zipf_ge_1",
          int(summary["managed_faster_at_zipf_ge_1"]))
     return rows
@@ -90,6 +121,141 @@ def _reexec(quick: bool) -> List[str]:
         return _rows(json.load(f))
 
 
+def _bucket(n, floor=64):
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+def _make_step_pair(backend, cache_ids, cache_rows, tokens, M, lr=0.1):
+    """Paired mesh train-step replicas over identical inputs.  Both share
+    the single-sort index stage, the jnp row math and the AdaGrad update
+    rule; they differ exactly in the collective layout ISSUE 6 changed:
+
+      legacy : PR-4 data movement — replicated psum of the (M+1, D) miss
+               buffer forward, dense (V, D) partial + tiled psum_scatter
+               backward, dense optimizer sweep over the sharded table;
+      fused  : destination-compacted routing — per-owner all-gather of
+               the miss rows forward, all_to_all routed (id, grad-row)
+               pairs applied on-shard, donated table/accum, no dense
+               (V, D) buffer anywhere.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+    from repro.kernels.pm_forward import step_residual
+
+    T = tokens.size
+    tok = tokens.reshape(-1).astype(jnp.int32)
+    Dm = cache_rows.shape[1]
+
+    def _combine(buf_rows, pc):
+        buffer = jnp.concatenate(
+            [buf_rows, jnp.zeros((1, Dm), buf_rows.dtype)])
+        return ref.pm_combine_ref(pc.hit, pc.cache_slot, pc.buf_slot,
+                                  cache_rows, buffer)
+
+    def _row_grads(res, buf_rows):
+        out = _combine(buf_rows, res.probe)
+        gt = 2.0 * out                    # d sum(out^2) / d out
+        seg_ids, seg_g = ops.segment_rows(tok, gt, n_slots=T, pad_id=V,
+                                          residual=res.sort)
+        return seg_ids, seg_g.astype(jnp.float32)
+
+    def legacy_step(table, accum):
+        res = step_residual(cache_ids, tok, M)
+        buf_rows = backend.gather_rows(table, res.probe.buf_ids)
+        seg_ids, seg_g = _row_grads(res, buf_rows)
+        g = backend.scatter_row_grads_psum(seg_ids, seg_g, V,
+                                           segmented=True)
+        new_accum = accum + g * g         # dense sweep over (V/n, D)
+        new_table = table - lr * g / (jnp.sqrt(new_accum) + 1e-8)
+        return new_table, new_accum
+
+    def fused_step(table, accum):
+        res = step_residual(cache_ids, tok, M)
+        buf_rows = backend.gather_rows_routed(table, res.probe.buf_ids,
+                                              res.probe.n_miss)
+        seg_ids, seg_g = _row_grads(res, buf_rows)
+        return backend.update_rows(table, accum, seg_ids, seg_g, lr=lr)
+
+    return (jax.jit(legacy_step),
+            jax.jit(fused_step, donate_argnums=(0, 1)))
+
+
+def _paired_step_medians(legacy, fused, table, accum, iters: int):
+    """Alternate the two steps call-for-call and report each side's
+    median latency (us).  The fused step donates its buffers, so every
+    call receives fresh sharded copies prepared — and blocked on —
+    outside the timed region."""
+    import jax
+    import jax.numpy as jnp
+
+    def fused_inputs():
+        pair = (jnp.copy(table), jnp.copy(accum))
+        jax.block_until_ready(pair)
+        return pair
+
+    jax.block_until_ready(legacy(table, accum))        # compile
+    jax.block_until_ready(fused(*fused_inputs()))
+    tl, tf = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(legacy(table, accum))
+        tl.append(time.perf_counter() - t0)
+        tc, ac = fused_inputs()
+        t0 = time.perf_counter()
+        jax.block_until_ready(fused(tc, ac))
+        tf.append(time.perf_counter() - t0)
+    return float(np.median(tl) * 1e6), float(np.median(tf) * 1e6)
+
+
+def _fused_arm(quick: bool):
+    """The ISSUE 6 acceptance measurement: routed fused step vs the PR-4
+    replica, per Zipf skew, on the 8-device mesh."""
+    import jax.numpy as jnp
+
+    from repro.data.pipeline import SyntheticCorpus
+    from repro.launch.mesh import make_model_mesh
+    from repro.pm.collectives import MeshBackend
+    from repro.pm.embedding import make_state, probe_host
+
+    backend = MeshBackend(make_model_mesh(N_DEV))
+    rng = np.random.default_rng(0)
+    table = backend.place_table(
+        jnp.asarray(rng.normal(size=(V, D)), jnp.float32))
+    accum = backend.place_table(jnp.full((V, D), 0.1, jnp.float32))
+    skews = SKEWS_QUICK if quick else SKEWS_FULL
+    iters = max(3, FUSED_ITERS // 2) if quick else FUSED_ITERS
+    entries = []
+    for zipf_a in skews:
+        corpus = SyntheticCorpus(V, zipf_a=zipf_a, seed=3)
+        tokens = corpus.tokens((B, K))
+        cache_ids = np.sort(corpus.perm[:C]).astype(np.int32)
+        probe = probe_host(cache_ids, tokens.reshape(-1), B * K)
+        M = _bucket(max(1, probe.n_miss))
+        st = make_state(table, jnp.asarray(cache_ids), backend)
+        legacy, fused = _make_step_pair(backend, jnp.asarray(cache_ids),
+                                        st.cache_rows,
+                                        jnp.asarray(tokens), M)
+        lus, fus = _paired_step_medians(legacy, fused, table, accum,
+                                        iters)
+        entries.append(dict(zipf=zipf_a, M=M,
+                            legacy_step_us=round(lus, 1),
+                            fused_step_us=round(fus, 1),
+                            speedup=round(lus / fus, 3)))
+        print(f"mesh,fused_step,zipf{zipf_a},us_legacy,{lus:.1f}")
+        print(f"mesh,fused_step,zipf{zipf_a},us_fused,{fus:.1f}")
+        print(f"mesh,fused_step,zipf{zipf_a},speedup,{lus / fus:.2f}")
+    return entries
+
+
+def _geomean(vals):
+    return float(np.exp(np.mean(np.log(list(vals)))))
+
+
 def _run_local(quick: bool):
     import jax
     import jax.numpy as jnp
@@ -114,13 +280,7 @@ def _run_local(quick: bool):
     plain_fn = jax.jit(lambda t, tok: plain_serve_lookup(
         t, tok, backend=backend))
 
-    def bucket(n, floor=64):
-        b = floor
-        while b < n:
-            b *= 2
-        return b
-
-    skews = [1.0, 1.1] if quick else [1.0, 1.1, 1.5]
+    skews = list(SKEWS_QUICK if quick else SKEWS_FULL)
     iters = ITERS // 2 if quick else ITERS
     entries = []
     for zipf_a in skews:
@@ -131,7 +291,7 @@ def _run_local(quick: bool):
         # — what `IntentPlanner` would derive from the signaled window
         cache_ids = np.sort(corpus.perm[:C]).astype(np.int32)
         probe = probe_host(cache_ids, tokens.reshape(-1), B * K)
-        M = bucket(max(1, probe.n_miss))
+        M = _bucket(max(1, probe.n_miss))
         probe = probe_host(cache_ids, tokens.reshape(-1), M)
         assert not probe.overflow.any()
         st = make_state(table, jnp.asarray(cache_ids), backend)
@@ -171,6 +331,7 @@ def _run_local(quick: bool):
             "train_fwd_bwd_plain_us": round(train_p_us, 1),
         })
 
+    fused_entries = _fused_arm(quick)
     summary = {
         "config": {"vocab": V, "dim": D, "tokens_per_batch": B * K,
                    "cache_capacity": C, "devices": N_DEV,
@@ -178,6 +339,16 @@ def _run_local(quick: bool):
         "entries": entries,
         "managed_faster_at_zipf_ge_1": all(
             e["speedup_x"] > 1.0 for e in entries if e["zipf"] >= 1.0),
+        "fused": {
+            "note": ("Routed fused managed step (all_to_all miss routing "
+                     "+ on-shard sparse AdaGrad, donated buffers) vs a "
+                     "PR-4 replica (replicated psum gather, dense (V, D) "
+                     "partial + psum_scatter, dense optimizer sweep); "
+                     "paired medians on the jnp data path."),
+            "entries": fused_entries,
+            "headline": {"speedup_geomean": round(_geomean(
+                [e["speedup"] for e in fused_entries]), 3)},
+        },
         "wall_clock_s": round(time.time() - t_start, 2),
     }
     with open(_OUT, "w") as f:
@@ -193,9 +364,86 @@ def run(quick: bool = False) -> List[str]:
     return _rows(_run_local(quick))
 
 
+def check_baseline(path: str) -> int:
+    """CI regression guard for the fused arm: re-measure the quick skews
+    and compare each zipf's fused-step median against the committed
+    baseline, normalized through the paired legacy replica
+    (machine-independent).  Returns a process exit code."""
+    import jax
+    if len(jax.devices()) < N_DEV:
+        # same one-attempt re-exec contract as `run` (see _reexec), but
+        # propagating the guard's exit code instead of raising
+        if os.environ.get("_MESH_BENCH_REEXEC"):
+            print(f"still fewer than {N_DEV} devices after forcing the "
+                  "host platform device count")
+            return 1
+        env = dict(os.environ, _MESH_BENCH_REEXEC="1")
+        flags = env.get("XLA_FLAGS", "")
+        env["XLA_FLAGS"] = (f"{flags} --xla_force_host_platform_device_"
+                            f"count={N_DEV}").strip()
+        return subprocess.run(
+            [sys.executable, "-m", "benchmarks.mesh_bench",
+             "--check-baseline", os.path.abspath(path)],
+            env=env, cwd=os.path.join(os.path.dirname(
+                os.path.abspath(__file__)), "..")).returncode
+
+    with open(path) as f:
+        base = json.load(f)
+    base_entries = {e["zipf"]: e
+                    for e in base.get("fused", {}).get("entries", [])}
+    if not base_entries:
+        print(f"no fused entries baseline in {path}")
+        return 1
+
+    def measure_ratios():
+        """Per-skew fused median in units of its paired legacy median,
+        relative to the committed baseline (>1 = slower than
+        committed)."""
+        ratios = {}
+        for e in _fused_arm(quick=True):
+            if e["zipf"] not in base_entries:
+                continue
+            b = base_entries[e["zipf"]]
+            now = e["fused_step_us"] / e["legacy_step_us"]
+            then = b["fused_step_us"] / b["legacy_step_us"]
+            ratios[e["zipf"]] = now / then
+            print(f"zipf{e['zipf']}: fused/legacy now {now:.3f} vs "
+                  f"baseline {then:.3f} (x{now / then:.2f})")
+        return ratios
+
+    ratios = measure_ratios()
+    if not ratios:
+        print("no overlapping zipf entries with the baseline")
+        return 1
+    geo = _geomean(ratios.values())
+    print(f"normalized fused-step median vs baseline: x{geo:.3f} "
+          f"(geomean over {len(ratios)} skews, tolerance "
+          f"x{REGRESSION_TOL})")
+    if geo > REGRESSION_TOL:
+        # one-sided scheduler noise on a shared CI host doesn't
+        # reproduce; a genuine routed-path regression does
+        print("possible regression — re-measuring to filter host noise")
+        second = measure_ratios()
+        best = {k: min(v, second.get(k, v)) for k, v in ratios.items()}
+        geo = _geomean(best.values())
+        print(f"best-of-two normalized median: x{geo:.3f}")
+    if geo > REGRESSION_TOL:
+        print(f"fused mesh step regressed >15% vs {path}")
+        return 1
+    print("fused mesh step within 15% of the committed baseline")
+    return 0
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized smoke (2 skews, half the iters)")
-    run(quick=ap.parse_args().quick)
+    ap.add_argument("--check-baseline", metavar="JSON", default=None,
+                    help="regression guard: compare the fused arm "
+                    "against a committed BENCH_mesh.json instead of "
+                    "writing results")
+    args = ap.parse_args()
+    if args.check_baseline:
+        raise SystemExit(check_baseline(args.check_baseline))
+    run(quick=args.quick)

@@ -138,7 +138,8 @@ def adagrad_row_update(table: jnp.ndarray, accum: jnp.ndarray,
             lambda: _adagrad_row_update(t, a, z, g, lr, eps, br, bd,
                                         interpret))
 
-    br, bd = pick_blocks("adagrad", n, D, table.dtype, block_r=block_r,
+    br, bd = pick_blocks("adagrad", n, D, table.dtype,
+                         table_rows=table.shape[0], block_r=block_r,
                          block_d=block_d, bench=bench)
     return _adagrad_row_update(table, accum, ids, grads, lr=lr, eps=eps,
                                block_r=br, block_d=bd, interpret=interpret)

@@ -123,6 +123,7 @@ def _measure_enabled(bench) -> bool:
 
 
 def pick_blocks(kind: str, n: int, d: int, dtype=None, *,
+                table_rows: Optional[int] = None,
                 block_r: Optional[int] = None,
                 block_d: Optional[int] = None,
                 bench: Optional[Callable[[int, int], float]] = None,
@@ -131,7 +132,15 @@ def pick_blocks(kind: str, n: int, d: int, dtype=None, *,
     `set_block_override` / env overrides, then the measured cache, then
     the heuristic.  ``bench(block_r, block_d) -> seconds`` enables the
     measured path (see module docstring for the mode switch); results are
-    cached per (kind, n, d, dtype, backend)."""
+    cached per (kind, n, d, dtype, table_rows, backend).
+
+    ``table_rows``: the height of the table-side operand (the gather /
+    scatter / update target).  It shapes the measured DMA pattern — the
+    probe spreads ids over the table — so it MUST be part of the cache
+    key: inside a `shard_map` the same (kind, n, d) call sees the
+    shard-local ``V / n_shards`` block, and a tile measured against the
+    full single-device V would otherwise be served stale to the mesh run
+    (and vice versa)."""
     br = block_r if block_r is not None else \
         _OVERRIDE["block_r"] if _OVERRIDE["block_r"] is not None else \
         _env_int("REPRO_BLOCK_R")
@@ -143,7 +152,7 @@ def pick_blocks(kind: str, n: int, d: int, dtype=None, *,
         return max(1, min(br, n)), bd
 
     import jax
-    key = (kind, n, d, str(dtype), jax.default_backend(), bd)
+    key = (kind, n, d, str(dtype), table_rows, jax.default_backend(), bd)
     if key in _TUNE_CACHE:
         return _TUNE_CACHE[key]
     if _measure_enabled(bench):

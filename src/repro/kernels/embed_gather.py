@@ -81,7 +81,8 @@ def embed_gather(table: jnp.ndarray, ids: jnp.ndarray, *,
         z = probe_ids(n, table.shape[0])
         return time_bench(lambda: _embed_gather(t, z, br, bd, interpret))
 
-    br, bd = pick_blocks("gather", n, D, table.dtype, block_r=block_r,
+    br, bd = pick_blocks("gather", n, D, table.dtype,
+                         table_rows=table.shape[0], block_r=block_r,
                          block_d=block_d, bench=bench)
     return _embed_gather(table, ids, block_r=br, block_d=bd,
                          interpret=interpret)

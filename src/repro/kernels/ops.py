@@ -123,6 +123,27 @@ def segment_rows(ids, grads, n_slots: int, pad_id=0, residual=None):
     return out_ids, out_g
 
 
+def owner_segments(sorted_ids, n_valid, n_owners: int, block: int):
+    """Per-owner segment boundaries of an ascending id list — the index
+    stage of the destination-compacted mesh routing (DESIGN.md §12).
+
+    ``sorted_ids`` must be ascending on its first ``n_valid`` entries
+    (the probe/compact and segment contracts: unique ids claim slots in
+    ascending-id order, so ownership grouping falls out of the step's one
+    sort); entries past ``n_valid`` may hold anything.  Returns
+    ``(view, seg)``: ``view[i] = sorted_ids[i]`` for ``i < n_valid`` and
+    the out-of-vocab sentinel ``n_owners * block`` after, and ``seg``
+    (``n_owners + 1`` entries) with ``seg[k]`` the first position owned by
+    shard k — per-owner send counts are ``seg[1:] - seg[:-1]``.  Pure
+    `searchsorted` over the ascending view: no sort is issued here."""
+    sentinel = n_owners * block
+    pos = jnp.arange(sorted_ids.shape[0], dtype=jnp.int32)
+    view = jnp.where(pos < n_valid, sorted_ids.astype(jnp.int32), sentinel)
+    bounds = jnp.arange(n_owners + 1, dtype=jnp.int32) * block
+    seg = jnp.searchsorted(view, bounds).astype(jnp.int32)
+    return view, seg
+
+
 @functools.partial(jax.jit, static_argnames=("n_slots",))
 def unique_rows(ids, n_slots: int, pad_id=0, residual=None):
     """Unique ids compacted into ``n_slots`` slots (unused slots keep

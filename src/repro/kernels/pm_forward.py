@@ -252,6 +252,7 @@ def pm_combine(hit: jnp.ndarray, cache_slot: jnp.ndarray,
     trash row last; returns (T, D).  Tiled (block_r, block_d); the feature
     dim is lane-padded, never shrunk (`kernels.blocking`)."""
     br, bd = pick_blocks("pm_combine", hit.shape[0], cache_rows.shape[1],
-                         cache_rows.dtype, block_r=block_r, block_d=block_d)
+                         cache_rows.dtype, table_rows=cache_rows.shape[0],
+                         block_r=block_r, block_d=block_d)
     return _pm_combine(hit, cache_slot, buf_slot, cache_rows, buf_rows,
                        block_r=br, block_d=bd, interpret=interpret)

@@ -22,6 +22,21 @@ def adagrad_row_update_ref(table, accum, ids, grads, *, lr=0.1, eps=1e-8):
     return new_table, new_accum
 
 
+def adagrad_row_add_ref(table, accum, ids, grads, *, lr=0.1, eps=1e-8):
+    """Scatter-ADD based AdaGrad row update: exact for unique ``ids``
+    plus any number of duplicate slots carrying all-zero gradients (the
+    routed mesh path's pad slots all alias local row 0).  The set-based
+    oracle above is undefined under duplicates (XLA picks one writer); the
+    add form is deterministic — a zero-grad duplicate contributes 0 to the
+    accumulator and 0 to the row delta."""
+    ids = ids.astype(jnp.int32)
+    g = grads.astype(jnp.float32)
+    new_accum = accum.at[ids].add((g * g).astype(accum.dtype))
+    denom = jnp.sqrt(new_accum[ids].astype(jnp.float32)) + eps
+    new_table = table.at[ids].add((-lr * g / denom).astype(table.dtype))
+    return new_table, new_accum
+
+
 def pm_combine_ref(hit, cache_slot, buf_slot, cache_rows, buf_rows):
     """Per-token select between cache row and compact miss-buffer row."""
     hit_rows = jnp.take(cache_rows, cache_slot.astype(jnp.int32), axis=0)

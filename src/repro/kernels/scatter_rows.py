@@ -89,7 +89,8 @@ def scatter_rows(base: jnp.ndarray, ids: jnp.ndarray, rows: jnp.ndarray, *,
         g = jnp.zeros(rows.shape, rows.dtype)
         return time_bench(lambda: _scatter_rows(b, z, g, br, bd, interpret))
 
-    br, bd = pick_blocks("scatter", n, D, base.dtype, block_r=block_r,
+    br, bd = pick_blocks("scatter", n, D, base.dtype,
+                         table_rows=base.shape[0], block_r=block_r,
                          block_d=block_d, bench=bench)
     return _scatter_rows(base, ids, rows, block_r=br, block_d=bd,
                          interpret=interpret)

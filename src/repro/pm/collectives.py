@@ -18,19 +18,43 @@ collective substrate is swappable:
   `MeshBackend`
       The real thing: the table is sharded ``P(axis, None)`` over a JAX
       device mesh and every data movement is an explicit `shard_map`
-      collective —
+      collective.  Since this PR the hot path is *destination-compacted
+      routing* (DESIGN.md §12) — the ascending unique-id layout that falls
+      out of the step's one sort already groups ids by owner shard, so
+      per-owner blocks are carved with `searchsorted` + `dynamic_slice`
+      (no extra sort) and each device touches only the rows it owns:
 
-        gather_rows       masked partial gather per shard + `lax.psum`
-                          of the ``(n, D)`` buffer (each shard contributes
-                          the rows it owns, zeros elsewhere);
-        scatter_row_grads tokens are chunked over shards, each shard
-                          scatter-adds its chunk's row gradients into a
-                          local ``(V, D)`` partial, and one tiled
-                          `lax.psum_scatter` routes the summed rows to
-                          their owner shard's ``(V/n, D)`` block;
-        refresh_rows      the replica-sync grouped all-gather: one masked
-                          psum over the ``(C, D)`` hot-row set (pad ids
-                          ``>= V`` belong to no shard and come back zero).
+        gather_rows_routed  each owner gathers its contiguous run of the
+                          compact miss ids from its local ``(V/n, D)``
+                          block into a fixed ``(cap, D)`` send block; one
+                          `lax.all_gather` of the per-owner blocks
+                          reassembles the replicated ``(M, D)`` buffer —
+                          per-device comm ~ ``n * cap * D = O(M·D)``,
+                          independent of n_shards (vs the replicated
+                          psum's ``O(M·D·n)``).  A skewed batch whose
+                          per-owner count exceeds the static cap falls
+                          back to the masked psum under one `lax.cond`;
+        gather_rows       the legacy replicated path (masked partial
+                          gather per shard + `lax.psum` of the full
+                          buffer) — the routed path's fallback arm and the
+                          benchmark baseline;
+        scatter_row_grads segment slots are chunked over shards; each
+                          shard destination-compacts its chunk (ascending
+                          -> contiguous per-owner runs) and one
+                          `lax.all_to_all` hands every owner exactly its
+                          rows, which scatter-add into the local
+                          ``(V/n, D)`` block — the dense ``(V, D)``
+                          partial + tiled psum_scatter of the legacy path
+                          (kept as `scatter_row_grads_psum`) never
+                          materialize;
+        update_rows       the fused sparse AdaGrad applied where the row
+                          lives: the same all_to_all routing delivers
+                          (id, grad-row) pairs to their owners and the
+                          row kernel updates the owner's local block
+                          in-place inside the same shard_map;
+        refresh_rows      replica sync via the routed gather over the
+                          sorted hot-id set (pad ids ``>= V`` belong to
+                          no shard and come back zero).
 
       Runs on any multi-device backend; CI exercises it on CPU via
       ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
@@ -53,7 +77,56 @@ try:  # jax >= 0.6
 except ImportError:  # pragma: no cover
     from jax.shard_map import shard_map  # type: ignore
 
-from repro.kernels import ops
+from repro.kernels import ops, ref
+
+
+def route_block_cap(m: int, n: int) -> int:
+    """Static per-owner block size of the routed miss path: the expected
+    even split ``ceil(m / n)`` with 2x headroom for skew, rounded to a
+    power of two (few distinct caps -> few compiled variants), never above
+    ``m`` itself.  Batches whose worst per-owner count exceeds this fall
+    back to the replicated psum under `lax.cond` — the same
+    correctness-over-capacity contract as the miss buffer's overflow
+    branch."""
+    c = 2 * (-(-m // n))
+    p = 1
+    while p < c:
+        p *= 2
+    return min(m, p)
+
+
+def _all_to_all_route(axis: str, n: int, block: int, vocab: int,
+                      tokp, gp, cap: int):
+    """INSIDE-shard_map half of the routed scatter/update: destination-
+    compact this shard's ``cap``-slot chunk of the (padded, ascending)
+    segment slots and exchange per-owner blocks with one `lax.all_to_all`.
+
+    The chunk is a contiguous slice of a globally ascending unique-id
+    list, so each destination's rows form one contiguous run —
+    `searchsorted` finds the run starts and ``rank = j - start[owner]``
+    places each row in its send block; a run can never exceed the chunk
+    length ``cap``, so the send layout ``(n * cap,)`` needs no overflow
+    arm.  Pad slots (id == vocab) are dropped on send and arrive as
+    sentinel ids on the receive side.  Returns ``(recv_ids, recv_g)``:
+    ``n * cap`` global ids (vocab = pad) with their gradient rows, all
+    owned by this shard."""
+    k = jax.lax.axis_index(axis)
+    tc = jax.lax.dynamic_slice_in_dim(tokp, k * cap, cap)
+    gc = jax.lax.dynamic_slice_in_dim(gp, k * cap, cap, axis=0)
+    starts = jnp.searchsorted(
+        tc, jnp.arange(n, dtype=jnp.int32) * block).astype(jnp.int32)
+    j = jnp.arange(cap, dtype=jnp.int32)
+    owner = tc // block
+    valid = tc < vocab
+    rank = j - starts[jnp.clip(owner, 0, n - 1)]
+    dst = jnp.where(valid, owner * cap + rank, n * cap)
+    send_ids = jnp.full((n * cap,), vocab, jnp.int32).at[dst].set(
+        tc, mode="drop")
+    send_g = jnp.zeros((n * cap, gp.shape[1]), gp.dtype).at[dst].set(
+        gc, mode="drop")
+    recv_ids = jax.lax.all_to_all(send_ids, axis, 0, 0, tiled=True)
+    recv_g = jax.lax.all_to_all(send_g, axis, 0, 0, tiled=True)
+    return recv_ids, recv_g
 
 
 @dataclass(frozen=True)
@@ -120,6 +193,33 @@ class EmulatedBackend:
         return ops.masked_embed_gather(table, jnp.clip(ids, 0, V - 1),
                                        ids < V, use_pallas=False)
 
+    def update_rows(self, table, accum, seg_ids, seg_g, *, lr: float,
+                    eps: float = 1e-8, kernel: bool = False):
+        """Fused sparse AdaGrad over segment slots: ``seg_ids`` are the
+        ascending unique batch ids followed by sentinel (== V) pads with
+        zero gradients (`ops.segment_rows` output).  Single-device
+        reference of the mesh backend's on-shard routed update — the
+        training step calls this through the backend so the optimizer
+        applies where the row lives on every substrate.
+
+        The slot order is REVERSED for the kernel path so every pad
+        program (an identity write: zero grad, original row value) runs
+        before row 0's real update — the grid executes in order, so the
+        real update always lands last and a trailing pad can never
+        overwrite it with the stale row.  The jnp path uses the
+        scatter-ADD form, which is order-free under zero-grad
+        duplicates."""
+        V = table.shape[0]
+        ids = seg_ids[::-1]
+        valid = ids < V
+        ids = jnp.where(valid, ids, 0)
+        rows_g = seg_g[::-1] * valid[:, None].astype(seg_g.dtype)
+        if kernel:
+            return ops.adagrad_row_update(table, accum, ids, rows_g,
+                                          lr=lr, eps=eps)
+        return ref.adagrad_row_add_ref(table, accum, ids, rows_g,
+                                       lr=lr, eps=eps)
+
 
 @dataclass(frozen=True)
 class MeshBackend:
@@ -177,21 +277,125 @@ class MeshBackend:
             in_specs=(P(self.axis, None), P(None)), out_specs=P(None),
             check_rep=False)(table, ids)
 
+    def gather_rows_routed(self, table, ids, n_valid, *,
+                           route_cap: int = 0, kernel: bool = False):
+        """Destination-compacted miss gather (DESIGN.md §12): ``ids`` must
+        be ascending unique real ids on ``ids[:n_valid]`` (the
+        probe/compact contract — unique missed ids claim buffer slots in
+        ascending-id order, so the step's one sort already grouped them by
+        owner); pad entries after may hold anything and come back ZERO
+        (unlike `gather_rows`, which returns row 0 for pad id 0 — callers
+        never read pad slots either way).
+
+        Each owner carves its contiguous run out of the id list
+        (`ops.owner_segments`: searchsorted + dynamic_slice, no sort),
+        gathers those rows from its local ``(V/n, D)`` block into a fixed
+        ``(cap, D)`` send block tagged with the original buffer slots, and
+        one `lax.all_gather` of the per-owner blocks reassembles the
+        replicated ``(M, D)`` buffer — every consumer needs every row (the
+        activations are replicated over the model axis), so the all-to-all
+        degenerates into an all-gather of owner blocks, and each row
+        crosses the wire once per consumer instead of riding all n psum
+        partials: per-device comm ``n * cap * D ~ 2·M·D``, independent of
+        n_shards.
+
+        ``route_cap`` pins the static per-owner block (the serving plan's
+        `route_capacity`); 0 derives `route_block_cap(M, n)`.  A batch
+        whose worst per-owner count exceeds the cap falls back to the
+        replicated psum under one `lax.cond` — correct, just slower."""
+        V, D = table.shape
+        block = self._check(V)
+        n = self.n_shards
+        M = ids.shape[0]
+        cap = min(M, route_cap) if route_cap > 0 else route_block_cap(M, n)
+        view, seg = ops.owner_segments(ids, n_valid, n, block)
+        viewp = jnp.concatenate([view, jnp.full((cap,), V, jnp.int32)])
+
+        def routed(_):
+            def f(tblk, viewp, seg):
+                k = jax.lax.axis_index(self.axis)
+                start = seg[k]
+                cnt = seg[k + 1] - start
+                sl = jax.lax.dynamic_slice_in_dim(viewp, start, cap)
+                j = jnp.arange(cap, dtype=jnp.int32)
+                mine = j < cnt
+                local = jnp.clip(sl - k * block, 0, block - 1)
+                rows = ops.masked_embed_gather(tblk, local, mine,
+                                               use_pallas=kernel)
+                # original buffer slot of each sent row; padding lands on
+                # the extra slot M and is sliced off after reassembly
+                slots = jnp.where(mine, start + j, M)
+                rows_all = jax.lax.all_gather(rows, self.axis)
+                slots_all = jax.lax.all_gather(slots, self.axis)
+                buf = jnp.zeros((M + 1, D), rows.dtype)
+                buf = buf.at[slots_all.reshape(-1)].add(
+                    rows_all.reshape(-1, D))
+                return buf[:M]
+
+            return shard_map(
+                f, mesh=self.mesh,
+                in_specs=(P(self.axis, None), P(None), P(None)),
+                out_specs=P(None), check_rep=False)(table, viewp, seg)
+
+        if cap >= M:        # the cap cannot be exceeded: no fallback arm
+            return routed(None)
+        counts = seg[1:] - seg[:-1]
+        return jax.lax.cond(jnp.max(counts) <= cap, routed,
+                            lambda _: self.gather_rows(table, view,
+                                                       kernel=kernel),
+                            None)
+
     def scatter_row_grads(self, tok, g, vocab_size: int, *,
                           kernel: bool = False, segmented: bool = False):
-        """psum_scatter-routed row gradients: tokens are chunked over the
-        mesh axis, each shard scatter-adds its chunk into a local ``(V, D)``
-        partial, and one tiled `lax.psum_scatter` both sums the partials
-        and delivers each owner shard exactly its ``(V/n, D)`` block
-        (n-fold less wire than a psum of the full gradient).
+        """all_to_all-routed row gradients: segment slots are chunked over
+        the mesh axis, each shard destination-compacts its chunk (the
+        global slot list is ascending unique ids then V-pads, so a chunk's
+        per-owner rows are contiguous runs — `_all_to_all_route`) and one
+        `lax.all_to_all` hands every owner exactly its rows, which
+        scatter-add into the local ``(V/n, D)`` block.  Neither the dense
+        ``(V, D)`` partial nor the tiled psum_scatter of the legacy path
+        (`scatter_row_grads_psum`) is materialized: per-device wire is the
+        ``(n·cap, D)`` send/recv blocks, ~``T·D / n`` each way.
 
-        ``segmented`` inputs are already duplicate-pre-summed compact
-        slots — the lookup backward's single global `segment_rows` pass
-        over the forward's sort residual — so the chunks (disjoint unique
-        ids) go straight into the partial: the per-chunk pre-sum that used
-        to run one sort per shard inside the shard_map is batched into
-        that one residual-fed pass.  Pad/chunk-pad tokens carry id V and
-        are dropped."""
+        Non-``segmented`` inputs are segmented here first (one sort, off
+        the single-sort hot path — every in-repo mesh caller arrives
+        segmented through the lookup backward's residual-fed pass)."""
+        V = vocab_size
+        n = self.n_shards
+        block = self._check(V)
+        if not segmented:
+            seg_ids, seg_g = ops.segment_rows(tok, g, n_slots=tok.shape[0],
+                                              pad_id=V)
+            tok, g = seg_ids, seg_g.astype(g.dtype)
+        D = g.shape[1]
+        T = tok.shape[0]
+        cap = -(-T // n)
+        pad = n * cap - T
+        tokp = jnp.concatenate(
+            [tok.astype(jnp.int32), jnp.full((pad,), V, jnp.int32)])
+        gp = jnp.concatenate([g, jnp.zeros((pad, D), g.dtype)])
+
+        def f(tokp, gp):
+            recv_ids, recv_g = _all_to_all_route(self.axis, n, block, V,
+                                                 tokp, gp, cap)
+            k = jax.lax.axis_index(self.axis)
+            local = recv_ids - k * block
+            ok = (local >= 0) & (local < block)
+            return jnp.zeros((block, D), gp.dtype).at[
+                jnp.where(ok, local, block)].add(recv_g, mode="drop")
+
+        return shard_map(
+            f, mesh=self.mesh, in_specs=(P(None), P(None)),
+            out_specs=P(self.axis, None), check_rep=False)(tokp, gp)
+
+    def scatter_row_grads_psum(self, tok, g, vocab_size: int, *,
+                               kernel: bool = False,
+                               segmented: bool = False):
+        """Legacy replicated-partial path (the PR-4 data movement, kept as
+        the routed path's benchmark/equivalence baseline): each shard
+        scatter-adds its chunk into a local dense ``(V, D)`` partial and
+        one tiled `lax.psum_scatter` both sums the partials and delivers
+        each owner its ``(V/n, D)`` block."""
         V = vocab_size
         n = self.n_shards
         self._check(V)
@@ -219,12 +423,63 @@ class MeshBackend:
             f, mesh=self.mesh, in_specs=(P(None), P(None)),
             out_specs=P(self.axis, None), check_rep=False)(tokp, gp)
 
+    def update_rows(self, table, accum, seg_ids, seg_g, *, lr: float,
+                    eps: float = 1e-8, kernel: bool = False):
+        """The on-shard fused sparse optimizer: the same all_to_all
+        routing as `scatter_row_grads` delivers each (id, grad-row) pair
+        to its owner, and the fused AdaGrad row kernel updates the owner's
+        local ``(V/n, D)`` table/accumulator blocks inside the same
+        shard_map — no dense sweep, no dense gradient, no second
+        collective.  ``seg_ids`` / ``seg_g`` follow the `segment_rows`
+        contract (ascending unique ids, then V-pads with zero gradients).
+
+        Received pad slots alias local row 0 with a zero gradient — safe
+        on the kernel path because the sequential grid re-reads the row
+        before each (identity) write, and on the jnp path because the
+        scatter-ADD form is order-free under zero-grad duplicates; real
+        received ids are unique per shard (chunks are disjoint slices of
+        a globally unique list)."""
+        V, D = table.shape
+        block = self._check(V)
+        n = self.n_shards
+        T = seg_ids.shape[0]
+        cap = -(-T // n)
+        pad = n * cap - T
+        tokp = jnp.concatenate(
+            [seg_ids.astype(jnp.int32), jnp.full((pad,), V, jnp.int32)])
+        gp = jnp.concatenate([seg_g, jnp.zeros((pad, D), seg_g.dtype)])
+
+        def f(tblk, ablk, tokp, gp):
+            recv_ids, recv_g = _all_to_all_route(self.axis, n, block, V,
+                                                 tokp, gp, cap)
+            k = jax.lax.axis_index(self.axis)
+            local = recv_ids - k * block
+            ok = (local >= 0) & (local < block)
+            ids_l = jnp.where(ok, local, 0)
+            g_l = recv_g * ok[:, None].astype(recv_g.dtype)
+            if kernel:
+                return ops.adagrad_row_update(tblk, ablk, ids_l[::-1],
+                                              g_l[::-1], lr=lr, eps=eps)
+            return ref.adagrad_row_add_ref(tblk, ablk, ids_l, g_l,
+                                           lr=lr, eps=eps)
+
+        return shard_map(
+            f, mesh=self.mesh,
+            in_specs=(P(self.axis, None), P(self.axis, None), P(None),
+                      P(None)),
+            out_specs=(P(self.axis, None), P(self.axis, None)),
+            check_rep=False)(table, accum, tokp, gp)
+
     def refresh_rows(self, table, cache_ids):
         """Replica sync round: the grouped all-gather of the plan's hot
-        rows, lowered as one owner-masked psum over ``(C, D)`` (each shard
-        contributes its owned hot rows; pad ids >= V belong to no shard
-        and come back zero — exactly the padded-cache contract)."""
-        return self.gather_rows(table, cache_ids)
+        rows through the routed gather — ``cache_ids`` are sorted
+        ascending with V-pads (the cache contract), exactly the layout the
+        router wants, and `searchsorted` recovers the real-id count
+        without a sort.  Pad ids >= V belong to no shard and come back
+        zero — the padded-cache contract."""
+        ids = cache_ids.astype(jnp.int32)
+        n_valid = jnp.searchsorted(ids, jnp.int32(table.shape[0]))
+        return self.gather_rows_routed(table, ids, n_valid)
 
 
 #: module-level default: the training path's single-device reference.

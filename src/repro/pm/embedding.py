@@ -81,13 +81,26 @@ def refresh_cache(state: EmbedPMState, cache_ids: jnp.ndarray | None = None,
 
 
 def combine_miss_buffer(backend, table, cache_rows, hit, cache_slot,
-                        buf_ids, buf_slot, *, kernel: bool = False):
+                        buf_ids, buf_slot, *, kernel: bool = False,
+                        n_miss=None, route_cap: int = 0):
     """THE shared managed-lookup data path (all variants funnel here):
     move the compact unique-miss buffer through the backend's
     vocab-parallel collective, append the all-zero trash row (slot M —
     overflow tokens land there), and per-token combine: hits read the
-    local replica cache, misses read the buffer.  Returns (T, D) rows."""
-    buf_rows = resolve(backend).gather_rows(table, buf_ids, kernel=kernel)
+    local replica cache, misses read the buffer.  Returns (T, D) rows.
+
+    ``n_miss`` (the probe's unique-miss count) switches the mesh backend
+    onto the destination-compacted routed gather (DESIGN.md §12): only
+    each owner's run of the compact ids moves, instead of the full
+    replicated buffer riding a psum.  ``route_cap`` optionally pins the
+    routed per-owner block (the serving plan's `route_capacity`)."""
+    be = resolve(backend)
+    if getattr(be, "mesh_real", False) and n_miss is not None:
+        buf_rows = be.gather_rows_routed(
+            table, buf_ids, jnp.minimum(n_miss, buf_ids.shape[0]),
+            route_cap=route_cap, kernel=kernel)
+    else:
+        buf_rows = be.gather_rows(table, buf_ids, kernel=kernel)
     buffer = jnp.concatenate(
         [buf_rows, jnp.zeros((1, table.shape[1]), buf_rows.dtype)])
     return ops.pm_combine(hit, cache_slot, buf_slot, cache_rows, buffer,
@@ -140,7 +153,7 @@ def _lookup_impl(table, cache_ids, cache_rows, tokens, miss_capacity,
     pc = residual.probe
     out = combine_miss_buffer(backend, table, cache_rows, pc.hit,
                               pc.cache_slot, pc.buf_ids, pc.buf_slot,
-                              kernel=kernel)
+                              kernel=kernel, n_miss=pc.n_miss)
 
     def with_overflow(o):
         dense = resolve(backend).gather_rows(table, tok)
@@ -242,7 +255,7 @@ def serve_lookup(table, cache_ids, cache_rows, tokens, miss_capacity: int,
     pc = probe_and_compact(cache_ids, tok, M)
     out = combine_miss_buffer(resolve(backend, n_shards), table, cache_rows,
                               pc.hit, pc.cache_slot, pc.buf_ids,
-                              pc.buf_slot, kernel=kernel)
+                              pc.buf_slot, kernel=kernel, n_miss=pc.n_miss)
     # overflow tokens route to the trash row -> zeros; make that explicit
     # (a planned buf id of 0 must not leak row 0 into an overflow slot)
     out = jnp.where(pc.overflow[:, None], 0.0, out)
@@ -263,9 +276,22 @@ class HostProbe(NamedTuple):
     n_miss: int             # unique missed ids (may exceed M)
 
 
-def probe_host(cache_ids, tok, miss_capacity: int) -> HostProbe:
+def probe_host(cache_ids, tok, miss_capacity: int, *,
+               owner_shards: int = 0, route_capacity: int = 0,
+               vocab: int = 0) -> HostProbe:
     """Numpy mirror of `kernels.pm_forward.probe_and_compact` for the
     serving runtime's admission path.
+
+    ``owner_shards`` / ``route_capacity`` / ``vocab`` (all three required
+    to engage) additionally flag *per-owner* overflow for the mesh
+    backend's routed miss path (DESIGN.md §12): a unique missed id whose
+    rank within its owner shard (owner = id // (V / owner_shards); the
+    compact ids are ascending, so ranks are positional) reaches
+    ``route_capacity`` would not fit the routed per-destination block, and
+    every token reading its slot gets its ``overflow`` flag set — the
+    runtime re-queues those requests exactly like global-capacity
+    overflow, so admission capacity matches the per-owner buffers the
+    routed collective actually has.
 
     On the serving hot path the scheduler holds the batch's token ids on
     the host the moment the batch is formed (they came out of the request
@@ -283,20 +309,43 @@ def probe_host(cache_ids, tok, miss_capacity: int) -> HostProbe:
     (the pin test now checks one implementation against itself on two
     array backends)."""
     r = host_compact(cache_ids, tok, miss_capacity)
+    overflow = r["overflow"]
+    if owner_shards > 0 and route_capacity > 0 and vocab > 0:
+        M = r["buf_ids"].shape[0]
+        nm = min(int(r["n_miss"]), M)
+        ids = np.asarray(r["buf_ids"][:nm], dtype=np.int64)
+        block = -(-vocab // owner_shards)
+        # ascending unique ids -> each owner's ids are one contiguous run;
+        # rank-within-owner is positional (the device router's layout)
+        starts = np.searchsorted(ids, np.arange(owner_shards,
+                                                dtype=np.int64) * block)
+        rank = np.arange(nm) - starts[np.minimum(ids // block,
+                                                 owner_shards - 1)]
+        slot_over = np.zeros(M + 1, dtype=bool)
+        slot_over[:nm] = rank >= min(route_capacity, M)
+        overflow = overflow | (slot_over[r["buf_slot"]] & ~r["hit"])
     return HostProbe(r["hit"], r["cache_slot"], r["buf_ids"],
-                     r["buf_slot"], r["overflow"], int(r["n_miss"]))
+                     r["buf_slot"], overflow, int(r["n_miss"]))
 
 
 def planned_serve_lookup(table, cache_rows, buf_ids, hit, cache_slot,
                          buf_slot, *, n_shards: int = 1,
-                         kernel: bool = False, backend=None):
+                         kernel: bool = False, backend=None,
+                         n_miss=None, route_cap: int = 0):
     """Device data path of the serving lookup, with the index stage
     already done (`probe_host` at admission — intent means the host knows
     the batch's miss set before the batch runs).  Only the (M+1, D)
     compact buffer moves through the backend's vocab-parallel collective;
     hits read the local replica cache; overflow slots read the all-zero
     trash row (``buf_slot == M``) and their requests are re-queued by the
-    runtime, never served.  Returns (T, D) rows."""
+    runtime, never served.  Returns (T, D) rows.
+
+    ``n_miss`` (host probe's unique-miss count, passed as a device
+    scalar) routes the mesh backend onto the destination-compacted gather
+    with per-owner blocks of ``route_cap`` (the plan's `route_capacity`;
+    the runtime's per-owner admission guarantees the cap fits, and the
+    psum fallback arm keeps even an unplanned batch correct)."""
     return combine_miss_buffer(resolve(backend, n_shards), table,
                                cache_rows, hit, cache_slot, buf_ids,
-                               buf_slot, kernel=kernel)
+                               buf_slot, kernel=kernel, n_miss=n_miss,
+                               route_cap=route_cap)

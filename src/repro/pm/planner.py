@@ -45,6 +45,12 @@ class PlacementPlan:
     predicted_miss_rate: float = 0.0   # expected per-access miss fraction
     #   over the signaled window — the serving runtime's drift baseline
     #   (observed miss rate far above it = the workload left the plan)
+    route_capacity: int = 0      # bucketed exact per-OWNER-shard unique-
+    #   miss bound (planners built with ``owner_shards > 0``): the static
+    #   per-destination block of the mesh backend's routed gather
+    #   (DESIGN.md §12) — admission capacity for the all_to_all path,
+    #   where `miss_capacity` sizes the shared compact buffer.  0 = no
+    #   owner accounting (non-mesh backends).
 
 
 def _bucket(n: int, floor: int = 64) -> int:
@@ -60,12 +66,21 @@ class IntentPlanner:
 
     def __init__(self, vocab_size: int, cache_capacity: int,
                  n_shards: int, plan_every: int = 8,
-                 per_node_bound: bool = False,
+                 per_node_bound: bool = False, owner_shards: int = 0,
                  alpha: float = 0.1, p: float = 0.9999, lam0: float = 10.0):
         self.V = vocab_size
         self.C = cache_capacity
         self.n_shards = n_shards
         self.plan_every = plan_every
+        # owner_shards > 0: additionally bound unique misses per OWNER
+        # shard (owner = id // (V / owner_shards), the engine's affine
+        # ownership rule) and publish it as `PlacementPlan.route_capacity`
+        # — the per-destination admission capacity of the mesh backend's
+        # routed miss path.  Note this is a bound over owner shards (where
+        # the row lives), not over signaling nodes (who wants it): the
+        # compact buffer is shared, so `miss_capacity` stays the global
+        # bound either way.
+        self.owner_shards = owner_shards
         # miss-capacity scope, threaded from the collective backend
         # (DESIGN.md §10): False sizes the buffer by the worst per-step
         # GLOBAL unique-miss count (the emulated single-buffer lookup);
@@ -180,7 +195,32 @@ class IntentPlanner:
             miss_capacity=_bucket(worst_miss),
             window=window,
             predicted_miss_rate=miss_rate,
+            route_capacity=self._route_capacity(keys, steps, hot),
         )
+
+    def _route_capacity(self, keys: np.ndarray, steps: np.ndarray,
+                        hot: np.ndarray) -> int:
+        """Exact per-owner-shard unique-miss bound over the window: the
+        worst, over (step, owner) pairs, count of distinct missed ids the
+        owner must serve in one step — the routed gather's per-destination
+        block size.  Bucketed with a smaller floor than the global bound
+        (per-owner counts are ~n_shards-fold smaller) and clamped to the
+        global capacity at the use site."""
+        if self.owner_shards <= 0:
+            return 0
+        if len(keys) == 0:
+            return _bucket(1, floor=16)
+        miss = ~np.isin(keys, hot)
+        if not np.any(miss):
+            return _bucket(1, floor=16)
+        block = -(-self.V // self.owner_shards)
+        # distinct (step, key) pairs, then count per (step, owner)
+        pair = np.unique(steps[miss].astype(np.int64) * np.int64(self.V)
+                         + keys[miss].astype(np.int64))
+        grp = (pair // np.int64(self.V)) * np.int64(self.owner_shards) \
+            + (pair % np.int64(self.V)) // block
+        _, cnt = np.unique(grp, return_counts=True)
+        return _bucket(int(cnt.max()), floor=16)
 
     def plan(self, current_step: int) -> PlacementPlan:
         """Build the plan for [current_step, current_step + lookahead)."""

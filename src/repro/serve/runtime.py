@@ -149,9 +149,22 @@ class ServingRuntime:
         self.queue = RequestQueue(self.intent)
         self.scheduler = MicroBatchScheduler(cfg.batch_requests,
                                              cfg.keys_per_request)
+        # mesh collective: admission is additionally bounded PER OWNER
+        # SHARD — the planner publishes `route_capacity` (the exact
+        # per-owner unique-miss bound over the queued horizon) and the
+        # device lookup routes per-owner blocks of exactly that size
+        # (DESIGN.md §12), so what admission admits is what the routed
+        # collective can carry.  (The per-shard bound lives on owner
+        # shards, not on the per-request "nodes" `per_node_bound` counts —
+        # request slots hold ~keys_per_request keys each, and a bound that
+        # small would starve the shared compact buffer.)
+        self._owner_shards = (self.backend.n_shards
+                              if self.backend is not None
+                              and self.backend.mesh_real else 0)
         self.planner = IntentPlanner(
             cfg.vocab, cfg.cache_capacity, n_shards=cfg.batch_requests,
-            plan_every=cfg.replan_every) if cfg.managed else None
+            plan_every=cfg.replan_every,
+            owner_shards=self._owner_shards) if cfg.managed else None
         self.plan: Optional[PlacementPlan] = None
         self._cache_ids = None           # device copy (refresh input)
         self._cache_ids_np = None        # host copy (admission-time probe)
@@ -159,15 +172,30 @@ class ServingRuntime:
         self._plain_fn = jax.jit(lambda t, toks: plain_serve_lookup(
             t, toks, n_shards=cfg.n_shards, backend=self.backend))
         # one jitted data-path fn; XLA re-specializes per miss bucket
-        # (buf_ids shape) — the planner's power-of-two bucket ladder keeps
-        # that a handful of executables
-        self._managed_fn = jax.jit(
-            lambda t, cr, bi, h, cs, bs: planned_serve_lookup(
-                t, cr, bi, h, cs, bs, n_shards=cfg.n_shards,
-                kernel=cfg.kernel, backend=self.backend))
+        # (buf_ids shape) and — on the mesh — per route-capacity bucket:
+        # both ride the planner's power-of-two ladders, so a handful of
+        # executables.  ``nm`` (the host probe's unique-miss count) rides
+        # along as a device scalar; the non-mesh path ignores it.
+        self._managed_fns: Dict[int, callable] = {}
         self.overlap_ratio: Optional[float] = None
         if cfg.managed:
             self._log_overlap_estimate()
+
+    def _managed_fn(self, route_cap: int = 0):
+        """Jitted serving data path, specialized per routed block size
+        (0 on non-mesh backends — the router is off without ``n_miss``
+        anyway, see `planned_serve_lookup`)."""
+        cfg = self.cfg
+        fn = self._managed_fns.get(route_cap)
+        if fn is None:
+            fn = jax.jit(
+                lambda t, cr, bi, h, cs, bs, nm: planned_serve_lookup(
+                    t, cr, bi, h, cs, bs, n_shards=cfg.n_shards,
+                    kernel=cfg.kernel, backend=self.backend,
+                    n_miss=(nm if self._owner_shards else None),
+                    route_cap=route_cap))
+            self._managed_fns[route_cap] = fn
+        return fn
 
     def _log_overlap_estimate(self) -> None:
         """One-shot startup calibration for ``double_buffer``: time one
@@ -196,9 +224,9 @@ class ServingRuntime:
             def device(p):
                 idx = jnp.asarray(np.stack([p.hit.astype(np.int32),
                                             p.cache_slot, p.buf_slot]))
-                jax.block_until_ready(self._managed_fn(
+                jax.block_until_ready(self._managed_fn()(
                     self.table, cache_rows, jnp.asarray(p.buf_ids),
-                    idx[0], idx[1], idx[2]))
+                    idx[0], idx[1], idx[2], jnp.int32(p.n_miss)))
 
             p = host()
             device(p)                # warmup + compile
@@ -340,16 +368,23 @@ class ServingRuntime:
                 # overflow flags) costs zero device readbacks, so every
                 # serve/requeue/replan decision below happens pre-execution
                 B, K = batch.tokens.shape
+                route_cap = (min(self.plan.route_capacity,
+                                 self.plan.miss_capacity)
+                             if self._owner_shards else 0)
                 probe = probe_host(self._cache_ids_np,
                                    batch.tokens.reshape(B * K),
-                                   self.plan.miss_capacity)
+                                   self.plan.miss_capacity,
+                                   owner_shards=self._owner_shards,
+                                   route_capacity=route_cap,
+                                   vocab=cfg.vocab)
                 # one packed H2D transfer for the three (T,) index arrays
                 idx = jnp.asarray(np.stack([
                     probe.hit.astype(np.int32), probe.cache_slot,
                     probe.buf_slot]))
-                out = self._managed_fn(
+                out = self._managed_fn(route_cap)(
                     self.table, self._cache_rows,
-                    jnp.asarray(probe.buf_ids), idx[0], idx[1], idx[2])
+                    jnp.asarray(probe.buf_ids), idx[0], idx[1], idx[2],
+                    jnp.int32(probe.n_miss))
                 hit_h = probe.hit.reshape(B, K)
                 over_h = probe.overflow.reshape(B, K)
                 nv = len(batch.reqs)

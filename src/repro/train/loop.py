@@ -137,7 +137,11 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig) -> LoopResult:
             # its AdaGrad accumulator — the step's hot buffers — are
             # updated in place instead of being copied every step (the
             # loop rebinds both from the step's outputs, so the old
-            # buffers are dead the moment the call returns)
+            # buffers are dead the moment the call returns).  This holds
+            # on the mesh path too: the NamedSharding'd table/accumulator
+            # enter and leave the fused step with the same P("model",
+            # None) layout, so XLA aliases the sharded buffers (pinned by
+            # the re-feed guard test in tests/test_collectives.py)
             step_fns[miss_capacity] = jax.jit(
                 make_train_step(
                     cfg, optimizer=lc.optimizer, lr=lc.lr,

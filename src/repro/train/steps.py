@@ -14,6 +14,7 @@ from repro.kernels.pm_forward import step_residual
 from repro.models.model import forward, loss_fn
 from repro.optim.optimizers import (AdaGradState, adagrad_init,
                                     adagrad_update, adam_init, adam_update)
+from repro.pm.collectives import resolve
 
 
 def make_train_step(cfg: ModelConfig, *, optimizer: str = "adagrad",
@@ -27,9 +28,12 @@ def make_train_step(cfg: ModelConfig, *, optimizer: str = "adagrad",
 
     ``pm_miss_capacity > 0`` activates the intent-managed embedding path
     (batch must then carry pm_cache_ids / pm_cache_rows); ``pm_kernel``
-    additionally routes the lookup through the Pallas kernels and — for
-    untied AdaGrad runs — applies the embedding update via the fused sparse
-    row kernel on exactly the touched rows instead of a dense (V, D) sweep.
+    additionally routes the lookup through the Pallas kernels.  For untied
+    AdaGrad runs, ``pm_kernel`` or a mesh backend applies the embedding
+    update via the fused sparse row path on exactly the touched rows
+    instead of a dense (V, D) sweep — on the mesh the update is *routed*:
+    each row's gradient travels to its owner shard over `lax.all_to_all`
+    and the row update runs on the owner's (V/n, D) block (DESIGN.md §12).
 
     Single-sort step (DESIGN.md §11): the step computes ONE
     `pm_forward.step_residual` from the batch tokens and every index
@@ -53,13 +57,15 @@ def make_train_step(cfg: ModelConfig, *, optimizer: str = "adagrad",
     update = adagrad_update if optimizer == "adagrad" else adam_update
     # sparse row updates need the gradient support to be exactly the batch
     # tokens: tied embeddings receive dense head gradients, so they keep
-    # the dense optimizer sweep.  The mesh backend also keeps it: the
-    # fused row kernel would need a shard_map wrapper to update a
-    # vocab-sharded table in place (the dense sweep is elementwise and
-    # partitions for free).
-    sparse_embed = (pm_kernel and pm_miss_capacity > 0
-                    and optimizer == "adagrad" and not cfg.tie_embeddings
-                    and not getattr(pm_backend, "mesh_real", False))
+    # the dense optimizer sweep.  The mesh backend takes the fused path
+    # regardless of ``pm_kernel``: its `update_rows` routes each segment
+    # slot to its owner shard (all_to_all) and updates the owner's
+    # (V/n, D) block inside shard_map — kernel or jnp row update alike —
+    # so the dense (V, D) sweep never runs on the mesh.
+    mesh_real = getattr(pm_backend, "mesh_real", False)
+    sparse_embed = (pm_miss_capacity > 0 and optimizer == "adagrad"
+                    and not cfg.tie_embeddings
+                    and (pm_kernel or mesh_real))
 
     def run_loss(p, batch, residual, embed_rows=None):
         if vp_loss_mesh is not None:
@@ -122,23 +128,21 @@ def make_train_step(cfg: ModelConfig, *, optimizer: str = "adagrad",
         rest_acc = {k: v for k, v in opt_state.accum.items() if k != "embed"}
         new_rest, rest_state = adagrad_update(g_rest, AdaGradState(rest_acc),
                                               rest, lr=lr)
-        # fused sparse AdaGrad on exactly the touched (unique) rows; pad
-        # slots carry id 0 with a zero gradient.  The slot order is
-        # REVERSED so every pad program (an identity write: zero grad,
-        # original row value) runs before row 0's real update — the grid
-        # executes in order, so the real update always lands last and a
-        # trailing pad can never overwrite it with the stale row.
+        # fused sparse AdaGrad on exactly the touched (unique) rows,
+        # applied where the row lives: the emulated backend updates the
+        # local table (`EmulatedBackend.update_rows` — the reversed-slot
+        # row kernel that used to live here), the mesh backend routes each
+        # segment slot's gradient to its owner shard (all_to_all) and runs
+        # the row update on the owner's (V/n, D) block inside shard_map
+        # (`MeshBackend.update_rows`, DESIGN.md §12)
         V = cfg.vocab_size
         gt = g_rows.reshape(T, emb.shape[1])
         seg_ids, seg_g = ops.segment_rows(
             tok, gt, n_slots=T, pad_id=V,
             residual=residual.sort if residual is not None else None)
-        ids = seg_ids[::-1]
-        valid = ids < V
-        ids = jnp.where(valid, ids, 0)
-        rows_g = seg_g[::-1] * valid[:, None].astype(seg_g.dtype)
-        new_emb, new_acc = ops.adagrad_row_update(
-            emb, opt_state.accum["embed"], ids, rows_g, lr=lr)
+        new_emb, new_acc = resolve(pm_backend).update_rows(
+            emb, opt_state.accum["embed"], seg_ids, seg_g, lr=lr,
+            kernel=pm_kernel)
         new_params = dict(new_rest, embed=new_emb)
         new_state = AdaGradState(dict(rest_state.accum, embed=new_acc))
         return loss_val, new_params, new_state

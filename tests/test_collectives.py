@@ -17,7 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.pm.collectives import EMULATED, EmulatedBackend, MeshBackend
+from repro.kernels import ops
+from repro.pm.collectives import (EMULATED, EmulatedBackend, MeshBackend,
+                                  route_block_cap)
 from repro.pm.embedding import (combine_miss_buffer, make_state, pm_lookup,
                                 plain_lookup, plain_serve_lookup,
                                 planned_serve_lookup, probe_host,
@@ -273,6 +275,301 @@ class TestMeshTrainLoop:
         assert res.overflows == 0
         assert res.plans > 1
         assert all(np.isfinite(res.losses))
+
+
+class TestRoutedMissPath:
+    """ISSUE 6 unit matrix: the destination-compacted routed primitives
+    against the replicated-psum legacy path and the dense reference."""
+
+    def test_route_block_cap_rule(self):
+        # 2x-headroom even split, pow2-rounded, clamped to m
+        assert route_block_cap(16, 1) == 16
+        assert route_block_cap(16, 2) == 16
+        assert route_block_cap(16, 8) == 4
+        assert route_block_cap(24, 8) == 8
+        assert route_block_cap(256, 8) == 64
+        assert route_block_cap(1, 8) == 1
+
+    @pytest.mark.parametrize("n", SHARD_COUNTS)
+    @pytest.mark.parametrize("kernel", [False, True])
+    def test_routed_gather_matches_take(self, n, kernel):
+        table, _, rng = setup()
+        be = mesh_backend(n)
+        ts = be.place_table(table)
+        M, nv = 24, 17
+        ids = np.full(M, V, np.int32)
+        ids[:nv] = np.sort(rng.choice(V, nv, replace=False))
+        for cap in (0, M):    # derived cap (cond arm for n=8) and pinned
+            out = be.gather_rows_routed(ts, jnp.asarray(ids),
+                                        jnp.int32(nv), route_cap=cap,
+                                        kernel=kernel)
+            np.testing.assert_allclose(
+                np.asarray(out[:nv]),
+                np.asarray(jnp.take(table, jnp.asarray(ids[:nv]), axis=0)),
+                rtol=1e-6)
+            # pad slots come back ZERO (stronger than gather_rows, which
+            # returns row `pad_id` — callers read neither)
+            np.testing.assert_array_equal(np.asarray(out[nv:]), 0.0)
+
+    @pytest.mark.parametrize("n", SHARD_COUNTS)
+    def test_routed_gather_skew_falls_back_to_psum(self, n):
+        """Worst-case skew — every miss owned by shard 0 — exceeds a tiny
+        pinned cap and must take the replicated-psum cond arm, still
+        byte-correct with zero pad slots."""
+        table, _, _ = setup()
+        be = mesh_backend(n)
+        ts = be.place_table(table)
+        M, nv = 32, 20
+        ids = np.full(M, V, np.int32)
+        ids[:nv] = np.arange(nv)
+        out = be.gather_rows_routed(ts, jnp.asarray(ids), jnp.int32(nv),
+                                    route_cap=8)
+        np.testing.assert_allclose(np.asarray(out[:nv]),
+                                   np.asarray(table[:nv]), rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(out[nv:]), 0.0)
+
+    @pytest.mark.parametrize("n", SHARD_COUNTS)
+    @pytest.mark.parametrize("segmented", [False, True])
+    def test_routed_scatter_matches_psum_and_dense(self, n, segmented):
+        table, _, rng = setup()
+        be = mesh_backend(n)
+        T = 40
+        tok = jnp.asarray(rng.integers(0, V, T), jnp.int32)
+        g = jnp.asarray(rng.normal(size=(T, D)), jnp.float32)
+        if segmented:
+            ids, gg = ops.segment_rows(tok, g, n_slots=T, pad_id=V)
+            args = (ids, gg.astype(g.dtype))
+        else:
+            args = (tok, g)
+        routed = be.scatter_row_grads(*args, V, segmented=segmented)
+        legacy = be.scatter_row_grads_psum(*args, V, segmented=segmented)
+        dense = jnp.zeros((V, D), jnp.float32).at[tok].add(g)
+        np.testing.assert_allclose(np.asarray(routed), np.asarray(dense),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(routed), np.asarray(legacy),
+                                   rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("n", SHARD_COUNTS)
+    @pytest.mark.parametrize("kernel", [False, True])
+    def test_update_rows_matches_emulated(self, n, kernel):
+        """The on-shard fused AdaGrad through the all_to_all router ==
+        the single-device emulated update, untouched rows bit-identical."""
+        table, _, rng = setup()
+        accum = jnp.asarray(rng.uniform(0.01, 1.0, size=(V, D)),
+                            jnp.float32)
+        T = 48
+        tok = jnp.asarray(rng.integers(0, V, T), jnp.int32)
+        g = jnp.asarray(rng.normal(size=(T, D)), jnp.float32)
+        seg_ids, seg_g = ops.segment_rows(tok, g, n_slots=T, pad_id=V)
+        seg_g = seg_g.astype(jnp.float32)
+        be = mesh_backend(n)
+        mt, ma = be.update_rows(be.place_table(table),
+                                be.place_table(accum), seg_ids, seg_g,
+                                lr=0.05, kernel=kernel)
+        et, ea = EMULATED.update_rows(table, accum, seg_ids, seg_g,
+                                      lr=0.05, kernel=kernel)
+        np.testing.assert_allclose(np.asarray(mt), np.asarray(et),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(ma), np.asarray(ea),
+                                   rtol=1e-5, atol=1e-6)
+        mask = np.ones(V, bool)
+        mask[np.asarray(tok)] = False
+        np.testing.assert_array_equal(np.asarray(mt)[mask],
+                                      np.asarray(table)[mask])
+
+
+def _sorts_in(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "sort":
+            n += 1
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (list, tuple)) else [v]
+            for x in vs:
+                if isinstance(x, jax.core.ClosedJaxpr):
+                    n += _sorts_in(x.jaxpr)
+                elif isinstance(x, jax.core.Jaxpr):
+                    n += _sorts_in(x)
+    return n
+
+
+def _dense_rows_in(jaxpr, vocab: int) -> list:
+    """Shapes of broadcast-materialized buffers with a leading dim >= the
+    full vocab — the dense (V, D) partials the routed path must never
+    build.  `cond` bodies are exempt: the skew fallback arm is allowed to
+    be dense."""
+    bad = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "cond":
+            continue
+        if eqn.primitive.name == "broadcast_in_dim":
+            shp = eqn.outvars[0].aval.shape
+            if shp and isinstance(shp[0], int) and shp[0] >= vocab:
+                bad.append(shp)
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (list, tuple)) else [v]
+            for x in vs:
+                if isinstance(x, jax.core.ClosedJaxpr):
+                    bad += _dense_rows_in(x.jaxpr, vocab)
+                elif isinstance(x, jax.core.Jaxpr):
+                    bad += _dense_rows_in(x, vocab)
+    return bad
+
+
+def _fused_setup():
+    from repro.configs.registry import get_config
+    from repro.models.model import init_model
+    from repro.train.steps import make_opt_init
+    cfg = get_config("smollm-135m", smoke=True).reduced(
+        tie_embeddings=False, n_heads=3, n_kv_heads=3)
+    rng = np.random.default_rng(0)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    opt = make_opt_init("adagrad")(params)
+    tokens = rng.integers(0, cfg.vocab_size, size=(2, 16)).astype(np.int32)
+    cache_ids = np.sort(rng.choice(cfg.vocab_size, 32,
+                                   replace=False)).astype(np.int32)
+    return cfg, params, opt, tokens, cache_ids
+
+
+def _fused_batch(tokens, cache_ids, emb, be=None):
+    st = make_state(emb, jnp.asarray(cache_ids), be)
+    return {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(tokens),
+            "pm_cache_ids": st.cache_ids, "pm_cache_rows": st.cache_rows}
+
+
+class TestMeshFusedStep:
+    """ISSUE 6 tentpole acceptance: the managed train step over the mesh
+    backend takes the routed fused sparse path — equal losses/params to
+    the emulated fused AND emulated dense steps, exactly one sort in its
+    jaxpr, no dense (V, D) buffer outside the fallback cond, and donated
+    sharded table/accumulator."""
+
+    M = 16
+
+    def _step(self, cfg, kernel, be=None):
+        from repro.train.steps import make_train_step
+        return make_train_step(cfg, pm_miss_capacity=self.M,
+                               pm_kernel=kernel, pm_backend=be, lr=0.05)
+
+    def _placed(self, be, params, opt):
+        mp = dict(params, embed=be.place_table(params["embed"]))
+        mo = type(opt)(dict(opt.accum,
+                            embed=be.place_table(opt.accum["embed"])))
+        return mp, mo
+
+    @pytest.mark.parametrize("n", SHARD_COUNTS)
+    @pytest.mark.parametrize("kernel", [False, True])
+    def test_matches_emulated_fused_and_dense(self, n, kernel):
+        cfg, params, opt, tokens, cache_ids = _fused_setup()
+        emb = params["embed"]
+        l_dense, p_dense, _ = self._step(cfg, False)(
+            params, opt, _fused_batch(tokens, cache_ids, emb))
+        l_fused, p_fused, s_fused = self._step(cfg, True)(
+            params, opt, _fused_batch(tokens, cache_ids, emb))
+        assert np.allclose(float(l_fused), float(l_dense), rtol=1e-5)
+        be = mesh_backend(n)
+        mp, mo = self._placed(be, params, opt)
+        lm, pm, sm = self._step(cfg, kernel, be)(
+            mp, mo, _fused_batch(tokens, cache_ids, mp["embed"], be))
+        assert np.allclose(float(lm), float(l_fused), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(pm["embed"]),
+                                   np.asarray(p_fused["embed"]),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(pm["embed"]),
+                                   np.asarray(p_dense["embed"]),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(sm.accum["embed"]),
+                                   np.asarray(s_fused.accum["embed"]),
+                                   atol=1e-5)
+
+    @needs(8)
+    @pytest.mark.parametrize("kernel", [False, True])
+    def test_one_sort_and_no_dense_vocab_buffer(self, kernel):
+        cfg, params, opt, tokens, cache_ids = _fused_setup()
+        be = mesh_backend(8)
+        mp, mo = self._placed(be, params, opt)
+        batch = _fused_batch(tokens, cache_ids, mp["embed"], be)
+        jaxpr = jax.make_jaxpr(self._step(cfg, kernel, be))(mp, mo, batch)
+        assert _sorts_in(jaxpr.jaxpr) == 1
+        assert _dense_rows_in(jaxpr.jaxpr, cfg.vocab_size) == []
+
+    @needs(2)
+    def test_donation_engages_re_feed_raises(self):
+        """The guard `train.loop` relies on: donated sharded buffers are
+        really consumed, so re-feeding the pre-step table is an error —
+        the loop must thread the returned arrays, never the originals."""
+        cfg, params, opt, tokens, cache_ids = _fused_setup()
+        be = mesh_backend(2)
+        mp, mo = self._placed(be, params, opt)
+        batch = _fused_batch(tokens, cache_ids, mp["embed"], be)
+        step = jax.jit(self._step(cfg, False, be), donate_argnums=(0, 1))
+        _, new_p, _ = step(mp, mo, batch)
+        jax.block_until_ready(new_p["embed"])
+        with pytest.raises(RuntimeError):
+            np.asarray(mp["embed"])
+
+    @needs(8)
+    def test_50_step_fused_trace_matches_emulated_dense(self):
+        """Untied smoke config: the mesh loop runs the routed FUSED
+        optimizer while the emulated loop runs the dense reference —
+        identical loss traces, zero overflow fallbacks."""
+        from repro.configs.registry import get_config
+        from repro.train.loop import LoopConfig, train_loop
+        cfg = get_config("smollm-135m", smoke=True).reduced(
+            tie_embeddings=False, n_heads=3, n_kv_heads=3)
+        base = dict(steps=50, batch=4, seq=32, pm=True, cache_capacity=64,
+                    log_every=0, seed=3)
+        r_emu = train_loop(cfg, LoopConfig(**base))
+        r_mesh = train_loop(cfg, LoopConfig(**base, collective="mesh",
+                                            model_shards=8))
+        np.testing.assert_allclose(r_mesh.losses, r_emu.losses,
+                                   rtol=1e-4, atol=1e-5)
+        assert r_mesh.overflows == 0
+
+
+class TestPerOwnerAdmission:
+    """Serving admission for the routed miss path: `probe_host` flags
+    per-owner overflow (DESIGN.md §12) and the planner publishes the
+    matching `route_capacity` bound."""
+
+    def test_probe_flags_per_owner_overflow(self):
+        cache = np.full(4, V, np.int32)          # empty cache: all miss
+        tok = np.asarray([1, 2, 3, 100, 3], np.int32)
+        base = probe_host(cache, tok, 8)
+        assert not base.overflow.any()
+        # owner blocks of 32: ids {1,2,3} are owner 0 ranks 0..2, id 100
+        # is owner 3 rank 0 — cap 2 overflows exactly id 3's tokens
+        pr = probe_host(cache, tok, 8, owner_shards=8, route_capacity=2,
+                        vocab=V)
+        np.testing.assert_array_equal(np.asarray(pr.overflow), tok == 3)
+        np.testing.assert_array_equal(np.asarray(pr.buf_ids),
+                                      np.asarray(base.buf_ids))
+        assert pr.n_miss == base.n_miss
+        ok = probe_host(cache, tok, 8, owner_shards=8, route_capacity=3,
+                        vocab=V)
+        assert not ok.overflow.any()
+
+    def test_probe_per_owner_off_without_mesh_args(self):
+        cache = np.full(4, V, np.int32)
+        tok = np.arange(20, dtype=np.int32)      # 20 misses in owner 0
+        pr = probe_host(cache, tok, 32)          # no owner accounting
+        assert not pr.overflow.any()
+
+    def test_planner_publishes_route_capacity(self):
+        from repro.pm.planner import IntentPlanner
+        pl = IntentPlanner(vocab_size=256, cache_capacity=4, n_shards=2,
+                           owner_shards=8)
+        # ids 0..19 all live in owner 0 (block 32): the worst
+        # per-(step, owner) unique-miss count is 20
+        for step in range(4):
+            pl.signal(step, 0, np.arange(20))
+            pl.signal(step, 1, np.asarray([40, 41]))
+        plan = pl.plan(0)
+        assert plan.route_capacity >= 20
+        # without owner accounting the field stays 0 (non-mesh backends)
+        pl0 = IntentPlanner(vocab_size=256, cache_capacity=4, n_shards=2)
+        pl0.signal(0, 0, np.asarray([1, 2]))
+        assert pl0.plan(0).route_capacity == 0
 
 
 class TestMeshServingRuntime:

@@ -257,6 +257,40 @@ class TestBlockAutotuner:
         assert br2 == 2 and len(calls) == n_calls   # second hit cached
         blocking.clear_autotune_cache()
 
+    def test_cache_key_includes_table_rows(self, monkeypatch):
+        """ISSUE 6 regression: the same (kind, n, d) measured against the
+        full table and a shard-local V/n block must NOT share a cached
+        tile — inside `shard_map` the DMA probe pattern spreads over a
+        different row count, so `table_rows` is part of the key."""
+        monkeypatch.setenv("REPRO_AUTOTUNE", "measure")
+        blocking.clear_autotune_cache()
+        calls = []
+
+        def bench_full(br, bd):
+            calls.append(("full", br))
+            return {1: 5.0, 2: 1.0, 4: 3.0, 8: 9.0, 16: 9.0}[br]
+
+        def bench_shard(br, bd):
+            calls.append(("shard", br))
+            return {1: 5.0, 2: 3.0, 4: 1.0, 8: 9.0, 16: 9.0}[br]
+
+        br_full, _ = blocking.pick_blocks("rows-test", 16, 256, "f32",
+                                          table_rows=1024,
+                                          bench=bench_full)
+        br_shard, _ = blocking.pick_blocks("rows-test", 16, 256, "f32",
+                                           table_rows=128,
+                                           bench=bench_shard)
+        assert br_full == 2 and br_shard == 4   # measured independently
+        n_calls = len(calls)
+        assert blocking.pick_blocks("rows-test", 16, 256, "f32",
+                                    table_rows=1024,
+                                    bench=bench_full)[0] == 2
+        assert blocking.pick_blocks("rows-test", 16, 256, "f32",
+                                    table_rows=128,
+                                    bench=bench_shard)[0] == 4
+        assert len(calls) == n_calls            # both served from cache
+        blocking.clear_autotune_cache()
+
     def test_heuristic_when_off(self, monkeypatch):
         monkeypatch.setenv("REPRO_AUTOTUNE", "off")
         blocking.clear_autotune_cache()
