@@ -23,9 +23,16 @@ Output: ``BENCH_hotpath.json`` at the repo root — full-scale entries plus
 CI-scale ``quick_entries`` — with the headline speedup at zipf 1.0 across
 D ∈ {64, 576, 1024}.
 
+The ``auto`` section (PR 7, DESIGN.md §13) drops the hand-pinned replica
+capacity: the intent signal's cache-worthy demand steers C onto the
+power-of-two ladder (`controller.steer_capacity` — the same rule the
+serve runtime and train loop run online), and the fused step is measured
+at that steered bucket against the hand-tuned quick C, paired per shape.
+
 CLI:
   python -m benchmarks.hotpath_bench [--quick]
   python -m benchmarks.hotpath_bench --quick --check-baseline BENCH_hotpath.json
+  python -m benchmarks.hotpath_bench --auto --check-baseline BENCH_hotpath.json
 
 ``--check-baseline`` is the CI regression guard: it re-measures the quick
 shapes and FAILS (exit 1) if the managed-step median regressed more than
@@ -33,7 +40,10 @@ shapes and FAILS (exit 1) if the managed-step median regressed more than
 through the paired PR-4 replica — current speedup vs baseline speedup —
 so absolute CPU-speed differences between CI hosts don't trip it, while a
 real hot-path regression (which slows the fused step but not its paired
-baseline) does.
+baseline) does.  With ``--auto`` the guard instead re-measures the
+auto arm and fails if the steered-capacity step falls more than 15%
+behind the hand-tuned capacity (paired medians in one process, so the
+comparison is machine-normalized by construction).
 """
 
 from __future__ import annotations
@@ -50,6 +60,7 @@ import numpy as np
 from repro.data.pipeline import SyntheticCorpus
 from repro.kernels import ops, ref
 from repro.kernels.pm_forward import probe_and_compact, step_residual
+from repro.pm.controller import Knob, OnlineController, capacity_ladder
 from repro.pm.planner import _bucket
 
 _REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
@@ -61,6 +72,7 @@ DIMS = (64, 576, 1024)
 SKEWS_FULL = (1.0, 1.1, 1.5)
 SKEWS_QUICK = (1.0, 1.1)
 REGRESSION_TOL = 1.15          # CI guard: >15% median regression fails
+AUTO_MIN_RATIO = 1 / REGRESSION_TOL  # steered C vs hand-tuned C, paired
 
 
 def _make_steps(table, accum, cache_ids, cache_rows, tokens, M, V, lr=0.1):
@@ -174,6 +186,70 @@ def _bench_entries(dims: dict, skews) -> List[dict]:
     return entries
 
 
+def _steered_capacity(V: int, tokens) -> tuple:
+    """The zero-tuning capacity for one step shape: the batch's
+    cache-worthy demand (its unique rows — what the queued horizon's
+    intent says is worth replicating) steers C onto the power-of-two
+    ladder via the exact signal rule the runtimes run online."""
+    ctl = OnlineController(
+        [Knob("C", capacity_ladder(V), adapt=False, prefer_low=True)])
+    demand = int(np.unique(np.asarray(tokens)).size)
+    ctl.steer_capacity("C", demand)
+    return int(ctl.value("C")), demand
+
+
+def _measure_at_capacity(corpus, tokens, V: int, C: int, D: int,
+                         iters: int) -> float:
+    """Fused-step median (us) with a C-row replica of the corpus head."""
+    cache_np = np.sort(corpus.perm[:C]).astype(np.int32)
+    cache_ids = jnp.asarray(cache_np)
+    uniq = np.unique(np.asarray(tokens))
+    M = _bucket(max(1, int(np.setdiff1d(uniq, cache_np).size)))
+    rng = np.random.default_rng(1)
+    table = jnp.asarray(rng.normal(size=(V, D)), jnp.float32)
+    accum = jnp.full((V, D), 0.1, jnp.float32)
+    cache_rows = jnp.take(table, cache_ids, axis=0)
+    legacy, fused = _make_steps(table, accum, cache_ids, cache_rows,
+                                tokens, M, V)
+    _, fus = _paired_medians(legacy, fused, table, accum, iters)
+    return fus
+
+
+def _auto_entries(dims: dict, skews, reps: int = 3) -> List[dict]:
+    """The zero-tuning arm: fused step at the demand-steered capacity vs
+    the hand-tuned quick C, paired per (zipf, D) shape.  Median of
+    ``reps`` paired ratios with the measurement order alternated per rep
+    (both sides run back-to-back in this process), so one-sided host
+    noise cancels and the ratio is machine-normalized by construction."""
+    V, B, S, C_tuned = dims["V"], dims["B"], dims["S"], dims["C"]
+    entries = []
+    for zipf_a in skews:
+        corpus = SyntheticCorpus(V, zipf_a=zipf_a, seed=0)
+        tokens = jnp.asarray(corpus.tokens((B, S)))
+        C_auto, demand = _steered_capacity(V, tokens)
+        for D in DIMS:
+            pairs = []
+            for rep in range(reps):
+                order = ((C_auto, C_tuned) if rep % 2 == 0
+                         else (C_tuned, C_auto))
+                t = {c: _measure_at_capacity(corpus, tokens, V, c, D,
+                                             dims["iters"])
+                     for c in order}
+                pairs.append((t[C_auto], t[C_tuned]))
+            mid = int(np.argsort([b / a for a, b in pairs])[len(pairs)
+                                                           // 2])
+            fus_auto, fus_tuned = pairs[mid]
+            ratio = fus_tuned / fus_auto      # >1: steered C is faster
+            entries.append(dict(zipf=zipf_a, D=D, demand=demand,
+                                auto_C=C_auto, tuned_C=C_tuned,
+                                auto_us=round(fus_auto, 1),
+                                tuned_us=round(fus_tuned, 1),
+                                auto_vs_tuned_x=round(ratio, 3)))
+            print(f"hotpath,auto,zipf{zipf_a}_D{D},auto_vs_tuned_x,"
+                  f"{ratio:.3f}")
+    return entries
+
+
 def _headline(entries: List[dict]) -> dict:
     at10 = [e["speedup"] for e in entries if e["zipf"] == 1.0]
     return {"speedup_zipf1.0_min": round(min(at10), 3),
@@ -202,6 +278,17 @@ def run(quick: bool = False) -> List[str]:
     doc["quick_config"] = {k: v for k, v in QUICK.items()}
     doc["quick_entries"] = _bench_entries(QUICK, SKEWS_QUICK)
     doc["quick_headline"] = _headline(doc["quick_entries"])
+    auto_entries = _auto_entries(QUICK, SKEWS_QUICK)
+    doc["auto"] = {
+        "note": ("Zero-tuning arm (DESIGN.md §13): the fused step at the "
+                 "demand-steered replica capacity vs the hand-tuned "
+                 "quick C, paired per shape."),
+        "entries": auto_entries,
+        "min_auto_vs_tuned_x": round(
+            min(e["auto_vs_tuned_x"] for e in auto_entries), 3),
+    }
+    rows.append(f"hotpath,auto,min_auto_vs_tuned_x,"
+                f"{doc['auto']['min_auto_vs_tuned_x']}")
     with open(_OUT, "w") as f:
         json.dump(doc, f, indent=1)
     print(f"wrote {os.path.relpath(_OUT)}")
@@ -209,6 +296,36 @@ def run(quick: bool = False) -> List[str]:
         rows.append(f"hotpath,managed_step,zipf{e['zipf']}_D{e['D']},"
                     f"speedup,{e['speedup']}")
     return rows
+
+
+def check_auto(path: str) -> int:
+    """CI guard for the zero-tuning arm: re-measure the steered-capacity
+    step against the hand-tuned capacity on the quick shapes and fail if
+    the paired median falls more than 15% behind (the two sides run
+    back-to-back in this process — machine-normalized by construction).
+    The committed baseline must already carry an ``auto`` section."""
+    with open(path) as f:
+        base = json.load(f)
+    if not base.get("auto", {}).get("entries"):
+        print(f"no auto section baseline in {path}")
+        return 1
+
+    def worst():
+        return min(e["auto_vs_tuned_x"]
+                   for e in _auto_entries(QUICK, SKEWS_QUICK))
+
+    meas = worst()
+    print(f"auto arm: min steered-vs-tuned paired median x{meas:.3f} "
+          f"(floor x{AUTO_MIN_RATIO:.3f})")
+    if meas < AUTO_MIN_RATIO:
+        print("possible regression — re-measuring to filter host noise")
+        meas = max(meas, worst())
+        print(f"best-of-two: x{meas:.3f}")
+    if meas < AUTO_MIN_RATIO:
+        print(f"steered capacity regressed >15% vs hand-tuned ({path})")
+        return 1
+    print("steered capacity within 15% of hand-tuned")
+    return 0
 
 
 def check_baseline(path: str) -> int:
@@ -276,7 +393,11 @@ if __name__ == "__main__":
     ap.add_argument("--check-baseline", metavar="JSON", default=None,
                     help="regression guard: compare against a committed "
                     "BENCH_hotpath.json instead of writing results")
+    ap.add_argument("--auto", action="store_true",
+                    help="with --check-baseline: guard the zero-tuning "
+                    "arm (demand-steered capacity vs hand-tuned, paired)")
     args = ap.parse_args()
     if args.check_baseline:
-        raise SystemExit(check_baseline(args.check_baseline))
+        raise SystemExit(check_auto(args.check_baseline) if args.auto
+                         else check_baseline(args.check_baseline))
     run(quick=args.quick)

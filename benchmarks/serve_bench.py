@@ -3,12 +3,24 @@
 Measures end-to-end request throughput and p50/p99 latency of the
 managed serving runtime (`repro.serve`) against the unmanaged
 vocab-parallel baseline across Zipf skews and hot-set drift rates, plus
-a drift-adaptation section that checks the acceptance invariants:
+a drift-adaptation section and a zero-tuning section that check the
+acceptance invariants:
 
   (a) managed serving >= 1.5x plain-lookup throughput at Zipf skew >= 1.0;
   (b) after a hot-set rotation the miss rate returns to within 2x of the
       pre-rotation steady state within one replan round;
-  (c) zero silently-dropped (zero-served) requests across the run.
+  (c) zero silently-dropped (zero-served) requests across the run;
+  (d) the online controller, starting from UNTUNED defaults
+      (capacity at the ladder floor, short cadence), reaches >= 0.9x the
+      frozen hand-tuned managed throughput within a single bench run at
+      every measured skew — with zero zero-served tokens across every
+      mid-run capacity resize.
+
+The operating config carries NO hand-set runtime knobs: capacity, replan
+cadence, refresh cadence and double-buffered admission are all ``"auto"``
+(DESIGN.md §13).  The PR-6 hand-tuned values survive only as the frozen
+``HAND_TUNED`` reference arm that the auto section compares against —
+the serving analogue of the hotpath bench's frozen legacy replica.
 
 Cost model: the embedding is vocab-sharded ``N_SHARDS`` ways and every
 row fetched from a non-local shard moves through the emulated
@@ -24,19 +36,25 @@ speedup is the median of per-rep throughput ratios (paired to cancel
 this container's bursty co-tenant noise).  Writes ``BENCH_serve.json``
 at the repo root next to BENCH_quick/BENCH_scale.
 
-CLI: ``python -m benchmarks.serve_bench [--quick]``.
+CLI: ``python -m benchmarks.serve_bench [--quick] [--auto]
+[--check-baseline BENCH_serve.json]`` — ``--check-baseline`` re-measures
+a CI-sized arm and fails on a >15% paired regression vs the committed
+numbers (with ``--auto``: the auto-vs-tuned ratio arm instead of the
+managed-vs-plain arms).
 """
 
 from __future__ import annotations
 
 import json
 import os
+import sys
 import time
 from dataclasses import replace
 from typing import Dict, List
 
 import numpy as np
 
+from repro.pm.controller import AUTO
 from repro.serve import (DriftingZipfStream, ReplayStream, ServeConfig,
                          ServingRuntime)
 
@@ -50,43 +68,90 @@ _OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
 # because only the miss buffer pays the collective
 N_SHARDS = 64
 V, D = 65536, 512
-B, K = 64, 64            # requests per micro-batch x keys per request
-C = 8192                 # replica-cache capacity (deep enough to absorb a
-#                          mixed old/new hot set across a rotation)
+B, K = 64, 64            # requests per micro-batch x keys per request —
+#                          workload geometry (arrival rate = B), not a
+#                          tuned runtime knob
 REPS = 7
 ROUNDS = 32
 MEASURE_FROM = 4
+# zero-tuning arm: the acceptance is that the controller REACHES the
+# hand-tuned throughput within a single run, so its measured window is
+# the post-convergence segment — a longer run with the adaptation
+# transient (~3-4 controller decisions) excluded from the clock, same
+# window for both arms (the tuned arm is steady throughout, so the
+# deeper measure_from does not advantage either side)
+ROUNDS_AUTO = 64
+MEASURE_FROM_AUTO = 24
+BACKLOG = 10             # warmup backlog rounds enqueued before round 0:
+#                          pinned (not derived from the replan cadence,
+#                          which is now controller-owned and moves) so
+#                          every arm replays the identical trace alignment
 STEADY_WINDOW = 5        # rounds of pre-rotation steady state
+REGRESSION_TOL = 1.15    # --check-baseline: fail beyond a 15% slowdown
+AUTO_MIN_RATIO = 0.9     # acceptance (d): auto >= 0.9x hand-tuned
+
+# The PR-6 hand-set values, FROZEN as the zero-tuning section's reference
+# arm only — the operating config below carries no tuned knobs.  Do not
+# "retune" these: the point of the comparison is that the controller
+# starting blind matches what an operator once found by hand.
+HAND_TUNED: Dict[str, object] = {
+    "cache_capacity": 8192, "replan_every": 8, "refresh_every": 0,
+    "double_buffer": False,
+}
 
 
-def _run_once(table, cfg: ServeConfig, replay: ReplayStream, warm):
+def _auto_cfg() -> ServeConfig:
+    """The operating config: every runtime knob controller-owned."""
+    return ServeConfig(vocab=V, batch_requests=B, keys_per_request=K,
+                       cache_capacity=AUTO, replan_every=AUTO,
+                       refresh_every=AUTO, double_buffer=AUTO,
+                       n_shards=N_SHARDS, summary=False)
+
+
+def _tuned_cfg() -> ServeConfig:
+    """The frozen hand-tuned reference arm (see HAND_TUNED)."""
+    return replace(_auto_cfg(), **HAND_TUNED)
+
+
+def _run_once(table, cfg: ServeConfig, replay: ReplayStream, warm,
+              rounds: int = ROUNDS, measure_from: int = MEASURE_FROM):
     rt = ServingRuntime(table, cfg)
     rt._managed_fn = warm._managed_fn
     rt._plain_fn = warm._plain_fn
-    return rt.run(replay, ROUNDS, measure_from=MEASURE_FROM)
+    return rt.run(replay, rounds, warmup_backlog=BACKLOG,
+                  measure_from=measure_from)
 
 
-def _paired_runs(table, cfg: ServeConfig, replay: ReplayStream,
-                 reps: int):
-    """Interleaved managed/plain reps on the same replayed trace.
+def _paired_runs(table, cfg_a: ServeConfig, cfg_b: ServeConfig,
+                 replay: ReplayStream, reps: int, warm):
+    """Interleaved A/B reps on the same replayed trace.
 
     The container's 2 CPUs see bursty co-tenant noise that can slow a
     whole run 2x; running the pair back-to-back and taking the *median of
     per-rep throughput ratios* cancels that common-mode noise, which
     separate medians cannot."""
-    plain_cfg = replace(cfg, managed=False)
-    warm = ServingRuntime(table, cfg)
-    warm.run(replay, max(10, MEASURE_FROM + 4), measure_from=2)
-    pwarm = ServingRuntime(table, plain_cfg)
-    pwarm.run(replay, 6, measure_from=2)
-    warm._plain_fn = pwarm._plain_fn
     pairs = []
     for _ in range(reps):
-        m = _run_once(table, cfg, replay, warm)
-        p = _run_once(table, plain_cfg, replay, warm)
-        pairs.append((m.throughput_rps / max(p.throughput_rps, 1e-9), m, p))
+        a = _run_once(table, cfg_a, replay, warm)
+        b = _run_once(table, cfg_b, replay, warm)
+        pairs.append((a.throughput_rps / max(b.throughput_rps, 1e-9), a, b))
     pairs.sort(key=lambda t: t[0])
     return pairs[len(pairs) // 2]
+
+
+def _warm(table, cfg: ServeConfig, replay: ReplayStream):
+    rt = ServingRuntime(table, cfg)
+    rt.run(replay, max(10, MEASURE_FROM + 4), warmup_backlog=BACKLOG,
+           measure_from=2)
+    return rt
+
+
+def _record(zipf_a: float, rot: int, extra: int = 4) -> ReplayStream:
+    scenario = "rotate" if rot else "steady"
+    stream = DriftingZipfStream(V, K, zipf_a=zipf_a, arrival_rate=B,
+                                scenario=scenario, rotate_every=rot or 32,
+                                seed=3)
+    return ReplayStream.record(stream, ROUNDS + BACKLOG + extra)
 
 
 def _drift_metrics(res, rotation_rounds: List[int]) -> List[Dict]:
@@ -131,18 +196,93 @@ def _drift_metrics(res, rotation_rounds: List[int]) -> List[Dict]:
     return out
 
 
+def _auto_pairs(table, replay: ReplayStream, reps: int, warm):
+    """Paired auto-vs-tuned reps over the converged window.
+
+    The two arms differ by only a few percent, so two bias sources the
+    big managed-vs-plain margins shrug off matter here: run ORDER within
+    a pair (allocator/cache spillover worth ~3-10%) is cancelled by
+    alternating which arm runs first, and the adaptation transient is
+    excluded by the MEASURE_FROM_AUTO window."""
+    pairs = []
+    for i in range(reps):
+        if i % 2 == 0:
+            a = _run_once(table, _auto_cfg(), replay, warm,
+                          rounds=ROUNDS_AUTO,
+                          measure_from=MEASURE_FROM_AUTO)
+            t = _run_once(table, _tuned_cfg(), replay, warm,
+                          rounds=ROUNDS_AUTO,
+                          measure_from=MEASURE_FROM_AUTO)
+        else:
+            t = _run_once(table, _tuned_cfg(), replay, warm,
+                          rounds=ROUNDS_AUTO,
+                          measure_from=MEASURE_FROM_AUTO)
+            a = _run_once(table, _auto_cfg(), replay, warm,
+                          rounds=ROUNDS_AUTO,
+                          measure_from=MEASURE_FROM_AUTO)
+        pairs.append((a.throughput_rps / max(t.throughput_rps, 1e-9),
+                      a, t))
+    pairs.sort(key=lambda t: t[0])
+    return pairs[len(pairs) // 2]
+
+
+def _auto_section(table, skews: List[float], reps: int) -> Dict:
+    """Zero-tuning acceptance arm: the controller starting from untuned
+    defaults (ladder-floor capacity, short cadence) vs the frozen
+    hand-tuned reference, paired on the same trace per skew."""
+    entries = []
+    warm = None
+    for zipf_a in skews:
+        replay = _record(zipf_a, 0, extra=ROUNDS_AUTO - ROUNDS + 4)
+        if warm is None:
+            # one shared compile cache across arms (same jit fns, shapes
+            # re-specialize per capacity bucket); the throwaway tuned run
+            # routes through warm's fns so the tuned shapes compile
+            # outside the measured reps
+            warm = _warm(table, _auto_cfg(), replay)
+            _run_once(table, _tuned_cfg(), replay, warm)
+        ratio, a, t = _auto_pairs(table, replay, reps, warm)
+        entries.append({
+            "zipf": zipf_a,
+            "auto_rps": round(a.throughput_rps, 1),
+            "tuned_rps": round(t.throughput_rps, 1),
+            "auto_vs_tuned_x": round(ratio, 3),
+            "meets_min_ratio": bool(ratio >= AUTO_MIN_RATIO),
+            "final_knobs": a.knobs,
+            "capacity_resizes": a.capacity_resizes,
+            "capacity_trace": a.capacity_trace,
+            "zero_served": a.zero_served,
+            "replans": a.replans,
+        })
+    return {
+        "untuned_start": {"cache_capacity": 64, "replan_every": 4,
+                          "refresh_every": 0, "double_buffer": False},
+        "hand_tuned_reference": HAND_TUNED,
+        "min_ratio_required": AUTO_MIN_RATIO,
+        "rounds": ROUNDS_AUTO,
+        "measured_from_round": MEASURE_FROM_AUTO,
+        "entries": entries,
+        "all_meet_min_ratio": all(e["meets_min_ratio"] for e in entries),
+        "zero_served_across_resizes": sum(
+            e["zero_served"] for e in entries),
+        "total_capacity_resizes": sum(
+            e["capacity_resizes"] for e in entries),
+    }
+
+
 def run(quick: bool = False) -> List[str]:
     t_start = time.time()
     rows: List[str] = []
     skews = [1.0, 1.1] if quick else [1.0, 1.1, 1.5]
     drift_rates = [0, 12] if quick else [0, 12, 20]   # rotate_every rounds
     reps = REPS if quick else REPS + 2
+    # acceptance (d) is stated over all three skews — measure them even in
+    # quick mode (the auto arm is cheap: one steady trace per skew)
+    auto_skews = [1.0, 1.1, 1.5]
 
     rng = np.random.default_rng(0)
     table = rng.normal(size=(V, D)).astype(np.float32)
-    base = ServeConfig(vocab=V, batch_requests=B, keys_per_request=K,
-                       cache_capacity=C, n_shards=N_SHARDS, replan_every=8)
-    backlog = base.replan_every + 2
+    base = _auto_cfg()
 
     throughput = []
     drift_entries = []
@@ -150,16 +290,19 @@ def run(quick: bool = False) -> List[str]:
     served_total = 0
     requeues_total = 0
 
+    warm = None
     for zipf_a in skews:
         for rot in drift_rates:
-            scenario = "rotate" if rot else "steady"
-            stream = DriftingZipfStream(
-                V, K, zipf_a=zipf_a, arrival_rate=B, scenario=scenario,
-                rotate_every=rot or 32, seed=3)
-            replay = ReplayStream.record(stream, ROUNDS + backlog + 4)
+            replay = _record(zipf_a, rot)
             tag = f"zipf{zipf_a}_rot{rot}"
+            if warm is None:
+                warm = _warm(table, base, replay)
+                pwarm = _warm(table, replace(base, managed=False), replay)
+                warm._plain_fn = pwarm._plain_fn
 
-            speedup, m, p = _paired_runs(table, base, replay, reps)
+            speedup, m, p = _paired_runs(
+                table, base, replace(base, managed=False), replay, reps,
+                warm)
             zero_served_total += m.zero_served
             served_total += m.served + p.served
             requeues_total += m.requeues
@@ -187,6 +330,7 @@ def run(quick: bool = False) -> List[str]:
                 "steady_miss_rate": round(
                     m.steady_miss_rate(MEASURE_FROM, m.rounds) or 0.0, 4),
                 "requeues": m.requeues, "zero_served": m.zero_served,
+                "final_knobs": m.knobs,
             })
             if rot:
                 for entry in _drift_metrics(m, replay.rotation_rounds):
@@ -198,21 +342,14 @@ def run(quick: bool = False) -> List[str]:
 
     # double-buffered admission (the probe-at-admission split means batch
     # t+1's whole index stage can run while the device executes batch t):
-    # paired managed-vs-managed comparison, pipeline on vs off, same trace
-    ov_stream = DriftingZipfStream(V, K, zipf_a=1.1, arrival_rate=B,
-                                   scenario="steady", seed=3)
-    ov_replay = ReplayStream.record(ov_stream, ROUNDS + backlog + 4)
-    buffered = replace(base, double_buffer=True)
-    warm = ServingRuntime(table, base)
-    warm.run(ov_replay, max(10, MEASURE_FROM + 4), measure_from=2)
-    ov_pairs = []
-    for _ in range(reps):
-        d = _run_once(table, buffered, ov_replay, warm)
-        s = _run_once(table, base, ov_replay, warm)
-        ov_pairs.append((d.throughput_rps / max(s.throughput_rps, 1e-9),
-                         d, s))
-    ov_pairs.sort(key=lambda t: t[0])
-    ov_win, ov_d, ov_s = ov_pairs[len(ov_pairs) // 2]
+    # paired managed-vs-managed comparison, pipeline on vs off, same
+    # trace, other knobs pinned to the frozen reference so the pipeline
+    # is the only variable
+    ov_replay = _record(1.1, 0)
+    serial = _tuned_cfg()
+    buffered = replace(serial, double_buffer=True)
+    ov_win, ov_d, ov_s = _paired_runs(table, buffered, serial, ov_replay,
+                                      reps, warm)
     emit(rows, "serve", "managed", "zipf1.1_steady", "overlap_win_x",
          round(ov_win, 3))
     overlap = {
@@ -221,16 +358,27 @@ def run(quick: bool = False) -> List[str]:
         "overlap_win_x": round(ov_win, 3),
         "double_buffer_p50_ms": round(ov_d.p50_ms, 2),
         "serial_p50_ms": round(ov_s.p50_ms, 2),
+        # the telemetry record the runtime's own auto-enable rule reads
+        "measured_overlap_ratio": round(warm.overlap_ratio, 3)
+        if warm.overlap_ratio is not None else None,
     }
+
+    auto = _auto_section(table, auto_skews, reps)
+    for e in auto["entries"]:
+        emit(rows, "serve", "auto", f"zipf{e['zipf']}", "auto_vs_tuned_x",
+             e["auto_vs_tuned_x"])
 
     speedups = [t["speedup_x"] for t in throughput]
     summary = {
         "config": {"vocab": V, "dim": D, "batch_requests": B,
-                   "keys_per_request": K, "cache_capacity": C,
-                   "n_shards": N_SHARDS, "replan_every": base.replan_every,
+                   "keys_per_request": K,
+                   "cache_capacity": AUTO, "replan_every": AUTO,
+                   "refresh_every": AUTO, "double_buffer": AUTO,
+                   "n_shards": N_SHARDS,
                    "reps": reps, "rounds": ROUNDS, "quick": quick},
         "throughput": throughput,
         "overlap": overlap,
+        "auto": auto,
         "min_speedup_at_zipf_ge_1.0": min(speedups),
         "drift": drift_entries,
         # non-vacuous: requires at least one measured post-replan window
@@ -247,7 +395,95 @@ def run(quick: bool = False) -> List[str]:
     emit(rows, "serve", "managed", "ALL", "min_speedup_x",
          round(min(speedups), 2))
     emit(rows, "serve", "managed", "ALL", "zero_served", zero_served_total)
+    emit(rows, "serve", "auto", "ALL", "min_auto_vs_tuned_x",
+         round(min(e["auto_vs_tuned_x"] for e in auto["entries"]), 3))
     return rows
+
+
+def check_baseline(path: str, auto: bool = False) -> None:
+    """CI guard: re-measure a small arm and compare against the committed
+    BENCH_serve.json.  Paired ratios normalize away absolute host speed;
+    the guard trips only when today's ratio falls >15% below the
+    committed one (geomean across arms, best-of-two on a first trip to
+    ride out co-tenant bursts).
+
+    Default arm: managed-vs-plain speedups at zipf {1.0, 1.1}, steady.
+    ``auto=True``: the zero-tuning arm — auto-vs-tuned ratio at zipf 1.1,
+    which additionally must clear the absolute AUTO_MIN_RATIO floor."""
+    with open(path) as f:
+        committed = json.load(f)
+    rng = np.random.default_rng(0)
+    table = rng.normal(size=(V, D)).astype(np.float32)
+    reps = 3
+
+    def measure() -> Dict[str, float]:
+        if auto:
+            replay = _record(1.1, 0, extra=ROUNDS_AUTO - ROUNDS + 4)
+            warm = _warm(table, _auto_cfg(), replay)
+            _run_once(table, _tuned_cfg(), replay, warm)
+            ratio, a, _ = _auto_pairs(table, replay, reps, warm)
+            if a.zero_served:
+                raise SystemExit(f"auto arm served {a.zero_served} "
+                                 "zeroed rows across capacity resizes")
+            return {"auto_zipf1.1": ratio}
+        out = {}
+        warm = None
+        for zipf_a in (1.0, 1.1):
+            replay = _record(zipf_a, 0)
+            if warm is None:
+                warm = _warm(table, _auto_cfg(), replay)
+                warm._plain_fn = _warm(
+                    table, replace(_auto_cfg(), managed=False),
+                    replay)._plain_fn
+            ratio, _, _ = _paired_runs(
+                table, _auto_cfg(), replace(_auto_cfg(), managed=False),
+                replay, reps, warm)
+            out[f"managed_zipf{zipf_a}"] = ratio
+        return out
+
+    def reference() -> Dict[str, float]:
+        if auto:
+            entries = committed.get("auto", {}).get("entries", [])
+            ref = {f"auto_zipf{e['zipf']}": e["auto_vs_tuned_x"]
+                   for e in entries if e["zipf"] == 1.1}
+            if not ref:
+                raise SystemExit("committed baseline has no auto section "
+                                 "at zipf 1.1 — regenerate BENCH_serve"
+                                 ".json")
+            return ref
+        ref = {}
+        for t in committed["throughput"]:
+            if t["rotate_every"] == 0 and t["zipf"] in (1.0, 1.1):
+                ref[f"managed_zipf{t['zipf']}"] = t["speedup_x"]
+        if not ref:
+            raise SystemExit("committed baseline has no steady arms")
+        return ref
+
+    ref = reference()
+
+    def verdict(meas: Dict[str, float]):
+        rel = [meas[k] / ref[k] for k in ref if k in meas]
+        geo = float(np.exp(np.mean(np.log(np.maximum(rel, 1e-9)))))
+        floor_ok = (not auto) or all(
+            meas[k] >= AUTO_MIN_RATIO for k in meas)
+        return geo, geo * REGRESSION_TOL >= 1.0 and floor_ok
+
+    meas = measure()
+    geo, ok = verdict(meas)
+    if not ok:
+        # one retry: a co-tenant burst can eat a whole measurement pass
+        meas2 = measure()
+        meas = {k: max(meas[k], meas2[k]) for k in meas}
+        geo, ok = verdict(meas)
+    arm = "auto-vs-tuned" if auto else "managed-vs-plain"
+    detail = " ".join(f"{k}={meas[k]:.2f}(ref {ref[k]:.2f})"
+                      for k in sorted(ref) if k in meas)
+    if not ok:
+        raise SystemExit(
+            f"serve {arm} regression: geomean {geo:.3f}x of committed "
+            f"(tolerance {1 / REGRESSION_TOL:.3f}) — {detail}")
+    print(f"serve {arm} baseline ok: geomean {geo:.3f}x of committed "
+          f"— {detail}")
 
 
 if __name__ == "__main__":
@@ -255,4 +491,14 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized smoke (2 skews x 2 drift rates)")
-    run(quick=ap.parse_args().quick)
+    ap.add_argument("--auto", action="store_true",
+                    help="with --check-baseline: guard the zero-tuning "
+                         "arm instead of managed-vs-plain")
+    ap.add_argument("--check-baseline", metavar="JSON", default=None,
+                    help="re-measure a small arm and fail on a >15%% "
+                         "paired regression vs the committed numbers")
+    args = ap.parse_args()
+    if args.check_baseline:
+        check_baseline(args.check_baseline, auto=args.auto)
+        sys.exit(0)
+    run(quick=args.quick)

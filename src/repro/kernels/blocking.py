@@ -162,7 +162,15 @@ def pick_blocks(kind: str, n: int, d: int, dtype=None, *,
                 break
             timed.append((bench(cand, bd), cand))
         br = min(timed)[1] if timed else 1
+        source = "measured"
     else:
         br = max(1, min(DEFAULT_BLOCK_R, n))
+        source = "heuristic"
     _TUNE_CACHE[key] = (br, bd)
+    # every fresh tile decision lands on the process-wide signal bus
+    # (one event per cache key: re-hits return above), so runs can audit
+    # which shapes were measured vs. defaulted (DESIGN.md §13)
+    from repro.obs.telemetry import default_bus
+    default_bus().event("autotune.blocks", kind=kind, n=n, d=d,
+                        block_r=br, block_d=bd, source=source)
     return br, bd

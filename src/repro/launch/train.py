@@ -9,7 +9,14 @@ from __future__ import annotations
 import argparse
 
 from repro.configs.registry import ARCH_IDS, get_config
+from repro.pm.controller import AUTO
 from repro.train.loop import LoopConfig, train_loop
+
+
+def _auto_or_int(v: str):
+    """Knob flag value: ``auto`` (controller-managed, the default) or an
+    explicit integer pin."""
+    return AUTO if v == AUTO else int(v)
 
 
 def main(argv=None):
@@ -29,11 +36,15 @@ def main(argv=None):
                     help="disable intent-managed embeddings")
     ap.add_argument("--kernel", action="store_true",
                     help="Pallas-backed managed hot path (native on TPU)")
-    ap.add_argument("--cache-capacity", type=int, default=256)
+    ap.add_argument("--cache-capacity", type=_auto_or_int, default=AUTO,
+                    help="replica-cache rows, or 'auto' (default): steered "
+                         "by intent demand over power-of-two buckets")
     ap.add_argument("--shards", type=int, default=4,
                     help="logical data shards for intent aggregation")
-    ap.add_argument("--refresh-every", type=int, default=1,
-                    help="replica sync cadence in steps (0: replans only)")
+    ap.add_argument("--refresh-every", type=_auto_or_int, default=AUTO,
+                    help="replica sync cadence in steps (0: replans only), "
+                         "or 'auto' (default): hill-climbed on measured "
+                         "loss-drop/s")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--init-from", default=None,
@@ -55,7 +66,8 @@ def main(argv=None):
           f"{res.losses[-1]:.4f}, {res.plans} placement plans, "
           f"{res.refreshes} replica refreshes, {res.overflows} overflow "
           f"fallbacks, {res.recompiles} compiled buckets, "
-          f"{res.wall_s:.1f}s wall")
+          f"{res.capacity_resizes} capacity resizes, "
+          f"knobs {res.knobs}, {res.wall_s:.1f}s wall")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,14 @@
+"""Observability: the structured telemetry bus every runtime layer
+publishes into (DESIGN.md §13).
+
+The serve runtime, train loop, planner, collectives and the kernel block
+autotuner record counters, gauges, latency reservoirs and events here;
+the online controller (`repro.pm.controller`) consumes the same records
+to adapt runtime knobs — one signal path instead of ad-hoc prints and
+scattered result fields.
+"""
+
+from repro.obs.telemetry import (Counter, Gauge, Reservoir, Telemetry,
+                                 default_bus)
+
+__all__ = ["Counter", "Gauge", "Reservoir", "Telemetry", "default_bus"]

@@ -51,6 +51,10 @@ class PlacementPlan:
     #   (DESIGN.md §12) — admission capacity for the all_to_all path,
     #   where `miss_capacity` sizes the shared compact buffer.  0 = no
     #   owner accounting (non-mesh backends).
+    demand: int = 0              # cache-worthy ids in the window (score >
+    #   0 under this plan's ranking): the intent-derived signal the
+    #   zero-tuning controller steers replica-cache capacity by
+    #   (`pm.controller.OnlineController.steer_capacity`, DESIGN.md §13)
 
 
 def _bucket(n: int, floor: int = 64) -> int:
@@ -65,12 +69,24 @@ class IntentPlanner:
     and emits `PlacementPlan`s."""
 
     def __init__(self, vocab_size: int, cache_capacity: int,
-                 n_shards: int, plan_every: int = 8,
+                 n_nodes: Optional[int] = None, plan_every: int = 8,
                  per_node_bound: bool = False, owner_shards: int = 0,
-                 alpha: float = 0.1, p: float = 0.9999, lam0: float = 10.0):
+                 alpha: float = 0.1, p: float = 0.9999, lam0: float = 10.0,
+                 n_shards: Optional[int] = None):
+        # ``n_nodes`` is the number of §4.1 *nodes* intent signals arrive
+        # from — what counts as a node depends on the caller: the training
+        # loop's data shards, or the serving runtime's requester slots
+        # within a micro-batch.  (``n_shards`` is the pre-PR-7 name, kept
+        # as an alias; it misread as vocab sharding at serving call sites,
+        # where a "shard" is really a request slot.)
+        if n_nodes is None:
+            n_nodes = n_shards
+        if n_nodes is None:
+            raise TypeError("IntentPlanner requires n_nodes (the number "
+                            "of intent-signaling nodes)")
         self.V = vocab_size
         self.C = cache_capacity
-        self.n_shards = n_shards
+        self.n_nodes = n_nodes
         self.plan_every = plan_every
         # owner_shards > 0: additionally bound unique misses per OWNER
         # shard (owner = id // (V / owner_shards), the engine's affine
@@ -97,12 +113,22 @@ class IntentPlanner:
         self._version = 0
         self._last_planned_step = -1
 
+    @property
+    def n_shards(self) -> int:
+        """Pre-PR-7 alias for `n_nodes` (see __init__)."""
+        return self.n_nodes
+
+    def set_capacity(self, cache_capacity: int) -> None:
+        """Retarget the replica-cache capacity (the zero-tuning
+        controller's resize hook); takes effect at the next plan."""
+        self.C = int(cache_capacity)
+
     # ------------------------------------------------------------ signals
     def signal(self, step: int, shard: int, ids: np.ndarray) -> None:
         """Loader signals: ``shard`` will access ``ids`` at ``step``
         (Intent(P, step, step+1) in the paper's API)."""
         per_shard = self._intents.setdefault(
-            step, [None] * self.n_shards)  # type: ignore[list-item]
+            step, [None] * self.n_nodes)  # type: ignore[list-item]
         per_shard[shard] = np.asarray(ids, dtype=np.int64)
 
     def signaled_ids(self, step: int) -> Optional[np.ndarray]:
@@ -196,6 +222,7 @@ class IntentPlanner:
             window=window,
             predicted_miss_rate=miss_rate,
             route_capacity=self._route_capacity(keys, steps, hot),
+            demand=int(np.count_nonzero(score > 0)),
         )
 
     def _route_capacity(self, keys: np.ndarray, steps: np.ndarray,

@@ -1,4 +1,4 @@
-"""Online serving runtime over the intent-managed embedding (§9).
+"""Online serving runtime over the intent-managed embedding (§9, §13).
 
 The loop that closes the paper's adaptation story *online*: enqueued
 requests have already signaled intent for the rows they will touch
@@ -9,47 +9,80 @@ execute through the read-only serving data path — jnp or Pallas-backed
 (`ServeConfig.kernel`), over the emulated or the mesh-real collective
 backend (`ServeConfig.collective`, DESIGN.md §10), no VJP, no optimizer.
 
-Re-planning is feedback-driven, zero-tuning in spirit: a plan carries its
-own predicted miss rate (exact over the horizon it was built from), and
-the runtime replans early the moment observed misses say the workload
-drifted away from the plan —
+Re-planning is feedback-driven: a plan carries its own predicted miss
+rate (exact over the horizon it was built from), and the runtime replans
+early the moment observed misses say the workload drifted away from the
+plan —
 
     replan  iff  rounds_since_plan >= replan_every        (cadence floor)
              or  batch overflowed its miss buffer          (hard signal)
              or  miss_rate > drift_factor * predicted      (soft signal)
 
+Zero-tuning (DESIGN.md §13): every runtime knob accepts ``"auto"`` — the
+default for capacity and cadence — and is then owned by the online
+controller (`pm.controller.OnlineController`) instead of an operator:
+
+  cache_capacity   steered by the *intent signal* at every replan: the
+                   queued horizon's cache-worthy demand
+                   (`PlacementPlan.demand`) picks the power-of-two bucket
+                   (grow immediately, shrink with hysteresis).  Mid-run
+                   resizes are exact — the new plan, cache ids and cache
+                   rows are installed atomically at a replan boundary, so
+                   no batch ever sees a mixed capacity (tested
+                   byte-identical across resize boundaries).
+  replan_every /   epsilon-greedy hill-climb on measured epoch throughput
+  batch_requests   (requests/s between replan boundaries), one knob in
+                   flight at a time.
+  double_buffer    auto-enabled when the measured admission/execute
+                   overlap ratio pays (`controller.overlap_pays`); the
+                   calibration that used to print one ad-hoc line at
+                   startup now records ``serve.overlap_*`` telemetry
+                   gauges benches and tests assert on, and the single
+                   human-readable line moved to the shutdown summary.
+
+Every adaptation signal the runtime acts on — miss rate, overflow and
+requeue counts, replan causes, capacity resizes, per-round latency — is
+published to the `repro.obs.telemetry` bus (``serve.*`` records); the
+controller consumes the bus at replan boundaries, so benches, tests and
+the controller all read the same source of truth.
+
 Because the whole index stage runs on the host at admission
 (`probe_host`), every drift signal is known *before* the batch executes —
-which is what makes the admission loop double-bufferable
-(``ServeConfig.double_buffer``): the runtime dispatches batch t to the
-device and, while it executes, enqueues/replans/probes batch t+1 on the
-host; batch t is only blocked on one round later.  Semantics are
-identical to the serial loop (each batch's plan/probe/cache snapshot is
-captured at dispatch), only the wall-clock overlap changes
-(`BENCH_serve.json` records the measured ratio; see the config field for
-why it defaults off on a CPU-only host).
+which is what makes the admission loop double-bufferable: the runtime
+dispatches batch t to the device and, while it executes, enqueues /
+replans / probes batch t+1 on the host; batch t is only blocked one
+round later.  Semantics are identical to the serial loop (tested).
 
 Overflowed requests are NEVER served zeros: their rows come back flagged,
 the requests re-enter the queue front, and the overflow itself is the
-drift signal that triggers the replan that will fit them.  The replica
-cache is refreshed (re-gathered from the table) on every replan round and
-every ``refresh_every`` rounds in between, so an out-of-band table update
-(e.g. a trainer checkpoint swap) reaches replicas within one refresh
-round — the serving analogue of the training loop's bounded staleness.
+drift signal that triggers the replan that will fit them.  Replica
+refresh follows the table's declared mutability: with ``refresh_every >
+0`` the cache is re-gathered on every replan and every ``refresh_every``
+rounds in between, so an out-of-band table update (e.g. a trainer
+checkpoint swap) reaches replicas within one refresh round — the serving
+analogue of the training loop's bounded staleness.  With ``refresh_every
+== 0`` (read-only table, the serving default) a replan that kept the
+cache contents skips the (C, D) re-gather entirely
+(``serve.refresh_skipped``) — steady-state replans then cost plan
+arithmetic only.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import StreamingIntentBuffer
+from repro.obs.telemetry import Telemetry
 from repro.pm.collectives import resolve
+from repro.pm.controller import (AUTO, Knob, OnlineController, capacity_ladder,
+                                 is_auto, overlap_pays, pow2_ladder,
+                                 resolve_knob)
 from repro.pm.embedding import (plain_serve_lookup, planned_serve_lookup,
                                 probe_host)
 from repro.pm.planner import IntentPlanner, PlacementPlan
@@ -60,9 +93,12 @@ from repro.serve.scheduler import MicroBatchScheduler
 @dataclass
 class ServeConfig:
     vocab: int
-    batch_requests: int = 32
+    batch_requests: Union[int, str] = 32   # requests per micro-batch;
+    #   "auto": hill-climbed over a power-of-two ladder
     keys_per_request: int = 16
-    cache_capacity: int = 512
+    cache_capacity: Union[int, str] = AUTO  # replica-cache rows; "auto"
+    #   (the default): intent-steered power-of-two buckets, resized
+    #   mid-run at replan boundaries (DESIGN.md §13)
     managed: bool = True         # False: plain vocab-parallel baseline
     n_shards: int = 1            # emulated vocab shards (collective cost)
     collective: str = "emulated"  # "emulated" | "mesh": collective backend
@@ -72,23 +108,26 @@ class ServeConfig:
     model_shards: int = 0        # mesh size for collective="mesh"
     #   (0 = every local device)
     kernel: bool = False         # Pallas-backed lookup data path
-    double_buffer: bool = False  # overlap admission with execution: probe
-    #   batch t+1 on the host while the device executes batch t (the
-    #   probe-at-admission split makes this free of device readbacks).
-    #   Semantics are identical either way (tested); the overlap pays
-    #   when execution is off-host (TPU) — on this repo's 2-core CPU
-    #   container the "device" shares the host cores, so the pipeline
-    #   buys contention instead of parallelism (the same reason
-    #   ``kernel`` defaults off on CPU); BENCH_serve.json's ``overlap``
-    #   entry records the measured ratio either way
-    replan_every: int = 8        # cadence floor (rounds between replans);
-    #   0 = feedback-only mode: replan solely on drift signals (overflow /
-    #   miss-rate), never on cadence or window exhaustion
-    refresh_every: int = 0       # extra replica re-gathers between replans
-    #   (0: replan rounds only — the right default for a read-only table;
-    #   set >0 when a trainer swaps the table out-of-band)
+    double_buffer: Union[bool, str] = AUTO  # overlap admission with
+    #   execution (one-slot pipeline).  "auto" (default): enabled iff the
+    #   measured admission/execute overlap ratio pays
+    #   (`controller.overlap_pays`) — ~1x on this repo's 2-core CPU
+    #   container where the "device" shares the host cores, ~2x when
+    #   execution is off-host (TPU), so auto resolves to off here and on
+    #   where it helps.  Explicit True/False pins it either way;
+    #   semantics are identical regardless (tested).
+    replan_every: Union[int, str] = AUTO  # cadence floor (rounds between
+    #   replans); "auto": hill-climbed.  0 = feedback-only mode: replan
+    #   solely on drift signals (overflow / miss-rate), never on cadence
+    #   or window exhaustion
+    refresh_every: Union[int, str] = AUTO  # extra replica re-gathers
+    #   between replans.  "auto" resolves to 0 — replan rounds only, the
+    #   right value for a read-only serving table (set >0 explicitly when
+    #   a trainer swaps the table out-of-band)
     drift_factor: float = 2.0    # soft replan: observed > factor*predicted
     max_attempts: int = 8        # loud failure, never a silent zero row
+    summary: bool = True         # print the one-line telemetry summary at
+    #   the end of the runtime's first run (the shutdown line)
     seed: int = 0
 
 
@@ -101,6 +140,7 @@ class ServeResult:
     requeues: int = 0            # requests re-queued after overflow
     overflow_batches: int = 0    # batches whose unique misses exceeded M
     zero_served: int = 0         # MUST stay 0: served rows with overflow
+    capacity_resizes: int = 0    # mid-run replica-cache bucket changes
     throughput_rps: float = 0.0
     p50_ms: float = 0.0
     p99_ms: float = 0.0
@@ -110,6 +150,11 @@ class ServeResult:
     #   (round, token-level miss rate) per executed batch
     replan_rounds: List[int] = field(default_factory=list)
     plan_miss_capacities: List[int] = field(default_factory=list)
+    capacity_trace: List[Tuple[int, int]] = field(default_factory=list)
+    #   (round, cache_capacity) per mid-run resize
+    knobs: Dict[str, object] = field(default_factory=dict)
+    #   the runtime's knob values at the end of the run (auto knobs land
+    #   wherever the controller drove them)
     outputs: Dict[int, np.ndarray] = field(default_factory=dict)
     #   rid -> (K, D) served rows (only when run(collect_outputs=True))
 
@@ -137,49 +182,101 @@ class _InFlight:
 class ServingRuntime:
     """Queue -> intent -> plan -> execute, one micro-batch per round."""
 
-    def __init__(self, table, cfg: ServeConfig):
+    def __init__(self, table, cfg: ServeConfig,
+                 telemetry: Optional[Telemetry] = None):
         self.cfg = cfg
         self.table = jnp.asarray(table)
         assert self.table.shape[0] == cfg.vocab
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
         from repro.pm.collectives import make_backend
         self.backend = make_backend(cfg.collective, cfg.model_shards)
         if self.backend is not None:
             self.table = self.backend.place_table(self.table)
+
+        # ---- knob resolution: "auto" fields belong to the controller
+        self._auto = {name for name, v in (
+            ("cache_capacity", cfg.cache_capacity),
+            ("replan_every", cfg.replan_every),
+            ("refresh_every", cfg.refresh_every),
+            ("batch_requests", cfg.batch_requests),
+            ("double_buffer", cfg.double_buffer)) if is_auto(v)}
+        cap_ladder = capacity_ladder(cfg.vocab)
+        self.cache_capacity = int(resolve_knob(cfg.cache_capacity,
+                                               cap_ladder[0]))
+        self.replan_every = int(resolve_knob(cfg.replan_every, 4))
+        # a read-only serving table never needs refreshes between replans
+        self.refresh_every = int(resolve_knob(cfg.refresh_every, 0))
+        self.batch_requests = int(resolve_knob(cfg.batch_requests, 16))
+        self.double_buffer = bool(resolve_knob(cfg.double_buffer, False))
+        self._ctl: Optional[OnlineController] = None
+        if cfg.managed and self._auto - {"refresh_every", "double_buffer"}:
+            knobs = []
+            if "cache_capacity" in self._auto:
+                # intent-steered, not hill-climbed (adapt=False): the
+                # queued horizon's demand computes the bucket directly
+                knobs.append(Knob("cache_capacity", cap_ladder,
+                                  index=cap_ladder.index(
+                                      self.cache_capacity),
+                                  adapt=False, prefer_low=True))
+            if "replan_every" in self._auto:
+                ladder = (2, 4, 8, 16, 32)
+                knobs.append(Knob("replan_every", ladder,
+                                  index=ladder.index(self.replan_every)))
+            if "batch_requests" in self._auto:
+                ladder = pow2_ladder(8, 256)
+                knobs.append(Knob("batch_requests", ladder,
+                                  index=ladder.index(self.batch_requests)))
+            self._ctl = OnlineController(knobs, self.telemetry,
+                                         seed=cfg.seed)
+
         self.intent = StreamingIntentBuffer() if cfg.managed else None
         self.queue = RequestQueue(self.intent)
-        self.scheduler = MicroBatchScheduler(cfg.batch_requests,
+        self.scheduler = MicroBatchScheduler(self.batch_requests,
                                              cfg.keys_per_request)
         # mesh collective: admission is additionally bounded PER OWNER
         # SHARD — the planner publishes `route_capacity` (the exact
-        # per-owner unique-miss bound over the queued horizon) and the
-        # device lookup routes per-owner blocks of exactly that size
+        # per-(step,owner) unique-miss bound over the queued horizon) and
+        # the device lookup routes per-owner blocks of exactly that size
         # (DESIGN.md §12), so what admission admits is what the routed
         # collective can carry.  (The per-shard bound lives on owner
-        # shards, not on the per-request "nodes" `per_node_bound` counts —
-        # request slots hold ~keys_per_request keys each, and a bound that
-        # small would starve the shared compact buffer.)
+        # shards, not on the signaling nodes below.)
         self._owner_shards = (self.backend.n_shards
                               if self.backend is not None
                               and self.backend.mesh_real else 0)
+        # n_nodes = REQUESTER SLOTS within a micro-batch, NOT vocab
+        # shards: serving maps §4.1's "nodes" onto batch positions (a key
+        # wanted by >= 2 queued requests in the same batch is concurrent
+        # intent), so the node count is the micro-batch width
         self.planner = IntentPlanner(
-            cfg.vocab, cfg.cache_capacity, n_shards=cfg.batch_requests,
-            plan_every=cfg.replan_every,
+            cfg.vocab, self.cache_capacity,
+            n_nodes=self.batch_requests,
+            plan_every=self.replan_every,
             owner_shards=self._owner_shards) if cfg.managed else None
         self.plan: Optional[PlacementPlan] = None
         self._cache_ids = None           # device copy (refresh input)
         self._cache_ids_np = None        # host copy (admission-time probe)
         self._cache_rows = None
+        self._pending_replan = False     # e.g. an out-of-band resize
+        # lifetime round clock: `run()` can be called repeatedly on one
+        # runtime (resize segments, drain calls) and the planner's rate
+        # estimator requires a monotone clock across those calls
+        self._lifetime_rounds = 0
         self._plain_fn = jax.jit(lambda t, toks: plain_serve_lookup(
             t, toks, n_shards=cfg.n_shards, backend=self.backend))
         # one jitted data-path fn; XLA re-specializes per miss bucket
-        # (buf_ids shape) and — on the mesh — per route-capacity bucket:
-        # both ride the planner's power-of-two ladders, so a handful of
-        # executables.  ``nm`` (the host probe's unique-miss count) rides
-        # along as a device scalar; the non-mesh path ignores it.
+        # (buf_ids shape), per capacity bucket (cache_rows shape) and —
+        # on the mesh — per route-capacity bucket: all three ride
+        # power-of-two ladders, so a handful of executables, and
+        # revisiting a bucket never recompiles (tested).  ``nm`` (the
+        # host probe's unique-miss count) rides along as a device scalar;
+        # the non-mesh path ignores it.
         self._managed_fns: Dict[int, callable] = {}
         self.overlap_ratio: Optional[float] = None
-        if cfg.managed:
-            self._log_overlap_estimate()
+        self._calibrated = False
+        self._summary_printed = False
+        # controller reward epochs: measured between replan boundaries
+        self._epoch_t0: Optional[float] = None
+        self._epoch_served0 = 0
 
     def _managed_fn(self, route_cap: int = 0):
         """Jitted serving data path, specialized per routed block size
@@ -197,22 +294,35 @@ class ServingRuntime:
             self._managed_fns[route_cap] = fn
         return fn
 
-    def _log_overlap_estimate(self) -> None:
-        """One-shot startup calibration for ``double_buffer``: time one
-        representative host-side admission probe against one device
-        dispatch on this host, and log the wall-clock ratio the one-slot
-        pipeline could buy — ``(host + device) / max(host, device)``,
-        ~2x when the two sides are balanced, ~1x when either dominates
-        (or when the "device" shares the host cores, the reason the flag
-        defaults off here).  Measurement and log only; the flag stays
-        whatever the config says — this exists so operators can see from
-        the startup line whether flipping it on would pay."""
+    # ----------------------------------------------------------- control
+    def current_knobs(self) -> Dict[str, object]:
+        """The live knob values (auto knobs: wherever the controller has
+        driven them so far)."""
+        return {"cache_capacity": self.cache_capacity,
+                "replan_every": self.replan_every,
+                "refresh_every": self.refresh_every,
+                "batch_requests": self.batch_requests,
+                "double_buffer": self.double_buffer}
+
+    def _calibrate_overlap(self) -> None:
+        """One-shot overlap calibration for double-buffered admission:
+        time one representative host-side admission probe against one
+        device dispatch on this host and record the wall-clock ratio the
+        one-slot pipeline could buy — ``(host + device) / max(host,
+        device)``, ~2x when the two sides are balanced, ~1x when either
+        dominates.  The measurement lands on the telemetry bus
+        (``serve.overlap_ratio`` / ``serve.overlap_host_ms`` /
+        ``serve.overlap_device_ms``) so benches and tests can assert on
+        it; with ``double_buffer="auto"`` the controller enables the
+        pipeline iff the ratio pays.  No startup print — the one
+        human-readable line is the shutdown `summary`."""
+        self._calibrated = True
         cfg = self.cfg
         try:
-            T = cfg.batch_requests * cfg.keys_per_request
+            T = self.batch_requests * cfg.keys_per_request
             rng = np.random.default_rng(0)
             tok = rng.integers(0, cfg.vocab, size=T).astype(np.int32)
-            cache_ids = np.arange(min(cfg.cache_capacity, cfg.vocab),
+            cache_ids = np.arange(min(self.cache_capacity, cfg.vocab),
                                   dtype=np.int32)
             M = max(1, min(64, T))   # the planner ladder's floor bucket
             cache_rows = resolve(self.backend).refresh_rows(
@@ -230,34 +340,153 @@ class ServingRuntime:
 
             p = host()
             device(p)                # warmup + compile
-            t0 = time.perf_counter()
-            host()
-            th = time.perf_counter() - t0
-            t0 = time.perf_counter()
-            device(p)
-            td = time.perf_counter() - t0
+
+            def timed(fn, *a):       # min-of-3: the noise-robust timer
+                best = float("inf")
+                for _ in range(3):
+                    t0 = time.perf_counter()
+                    fn(*a)
+                    best = min(best, time.perf_counter() - t0)
+                return best
+
+            th = timed(host)
+            td = timed(device, p)
             self.overlap_ratio = (th + td) / max(th, td, 1e-9)
-            print(f"[serve] double_buffer="
-                  f"{'on' if cfg.double_buffer else 'off'}: measured "
-                  f"admission/execute overlap ~{self.overlap_ratio:.2f}x "
-                  f"(host probe {th * 1e3:.2f} ms, device dispatch "
-                  f"{td * 1e3:.2f} ms per batch)")
-        except Exception as e:       # pragma: no cover — never block startup
-            print(f"[serve] overlap calibration skipped: {e}")
+            self.telemetry.set("serve.overlap_ratio", self.overlap_ratio)
+            self.telemetry.set("serve.overlap_host_ms", th * 1e3)
+            self.telemetry.set("serve.overlap_device_ms", td * 1e3)
+            # the ratio predicts the pipeline win only when execution is
+            # genuinely off-host: on the CPU backend the "device" IS the
+            # host cores, so overlap adds contention, not parallelism
+            # (measured ~0.98x win at a ~1.25x predicted ratio) — same
+            # backend gate as the kernel autotuner's measured mode
+            if "double_buffer" in self._auto \
+                    and jax.default_backend() != "cpu" \
+                    and overlap_pays(self.overlap_ratio):
+                self.double_buffer = True
+                self.telemetry.event("ctl.force", knob="double_buffer",
+                                     value=True, cause="overlap")
+        except Exception as e:       # pragma: no cover — never block a run
+            self.telemetry.event("serve.overlap_calibration_skipped",
+                                 error=repr(e))
+
+    def summary(self) -> str:
+        """The single human-readable shutdown line (replaces the old
+        startup calibration print): final knob values, which of them the
+        controller owned, and the headline telemetry."""
+        t = self.telemetry
+        knobs = " ".join(f"{k}={v}" for k, v in
+                         self.current_knobs().items())
+        auto = ",".join(sorted(self._auto)) or "none"
+        ratio = f"{self.overlap_ratio:.2f}x" \
+            if self.overlap_ratio is not None else "n/a"
+        return (f"[serve] shutdown: {knobs} auto=({auto}) "
+                f"overlap~{ratio} "
+                f"replans={int(t.counter_value('serve.replans'))} "
+                f"resizes={int(t.counter_value('serve.capacity_resizes'))} "
+                f"overflows={int(t.counter_value('serve.overflow_batches'))}"
+                f" miss_rate~{t.gauge_value('serve.miss_rate', 0.0):.3f}")
+
+    def resize_capacity(self, cache_capacity: int) -> None:
+        """Mid-run replica-cache resize (the controller's hook; also
+        public for operators/tests).  Takes effect atomically at the next
+        replan boundary: the new plan, cache ids and cache rows are
+        installed together, so no batch ever executes against a mixed
+        capacity — results across the resize stay exact."""
+        self._set_capacity(int(cache_capacity), rnd=-1)
+        self._pending_replan = True
+
+    def _set_capacity(self, cache_capacity: int, rnd: int) -> None:
+        if cache_capacity == self.cache_capacity:
+            return
+        self.cache_capacity = cache_capacity
+        self.planner.set_capacity(cache_capacity)
+        self.telemetry.inc("serve.capacity_resizes")
+        self.telemetry.set("serve.cache_capacity", cache_capacity)
+        self.telemetry.event("serve.capacity_resize", round=rnd,
+                             capacity=cache_capacity)
+
+    def _set_batch_requests(self, b: int) -> None:
+        self.batch_requests = b
+        self.scheduler.B = b
+        self.telemetry.set("serve.batch_requests", b)
+
+    def _controller_step(self, rnd: int, res: ServeResult) -> None:
+        """Measured hill-climb decision at a replan boundary: reward is
+        the epoch's served requests/s (the epoch = rounds since the last
+        boundary).  Applied BEFORE the new plan is built so the plan sees
+        the new cadence/batch width."""
+        now = time.perf_counter()
+        if self._ctl is not None and self._epoch_t0 is not None:
+            wall = now - self._epoch_t0
+            served = self.scheduler.n_served - self._epoch_served0
+            if wall > 0 and served > 0:
+                reward = served / wall
+                self.telemetry.set("ctl.reward", reward)
+                for name, v in self._ctl.observe(reward).items():
+                    self._apply_knob(name, v, rnd, res)
+        self._epoch_t0 = now
+        self._epoch_served0 = self.scheduler.n_served
+
+    def _apply_knob(self, name: str, v, rnd: int, res: ServeResult) -> None:
+        if name == "cache_capacity":
+            self._set_capacity(int(v), rnd)
+        elif name == "replan_every":
+            self.replan_every = int(v)
+            self.planner.plan_every = int(v)
+            self.telemetry.set("serve.replan_every", v)
+        elif name == "batch_requests":
+            self._set_batch_requests(int(v))
+        elif name == "refresh_every":
+            self.refresh_every = int(v)
 
     # ---------------------------------------------------------------- plan
-    def _replan(self, rnd: int, res: ServeResult) -> None:
+    def _replan(self, rnd: int, res: ServeResult, cause: str) -> None:
+        self._controller_step(rnd, res)
         keys, slots, ticks = self.intent.snapshot(
-            self.queue.order_ids(), self.cfg.batch_requests)
+            self.queue.order_ids(), self.batch_requests)
         if len(keys) == 0:
             return
-        self.plan = self.planner.replan_from_queue(keys, slots, ticks)
-        self._cache_ids_np = self.plan.cache_ids
-        self._cache_ids = jnp.asarray(self.plan.cache_ids)
-        self._refresh(res)
+        plan = self.planner.replan_from_queue(keys, slots, ticks)
+        if self._ctl is not None and "cache_capacity" in self._auto:
+            # intent-signal capacity steering: the plan's demand count IS
+            # the bucket; a changed bucket re-plans over the same snapshot
+            # so plan/ids/rows stay mutually consistent
+            new_cap = self._ctl.steer_capacity("cache_capacity",
+                                               plan.demand)
+            if new_cap is not None:
+                self._set_capacity(int(new_cap), rnd)
+                res.capacity_resizes += 1
+                res.capacity_trace.append((rnd, int(new_cap)))
+                plan = self.planner.replan_from_queue(keys, slots, ticks)
+        # a replan that kept the cache contents (sorted ids are canonical,
+        # so set-equality IS array-equality) needs no re-gather when the
+        # serving table is declared read-only (refresh_every == 0: no
+        # out-of-band updates to sync) — steady-state replans then cost
+        # plan arithmetic only, not a (C, D) gather
+        same_cache = (self._cache_ids_np is not None
+                      and self._cache_rows is not None
+                      and np.array_equal(plan.cache_ids,
+                                         self._cache_ids_np))
+        self.plan = plan
+        if same_cache and self.refresh_every == 0:
+            self.telemetry.inc("serve.refresh_skipped")
+        else:
+            self._cache_ids_np = self.plan.cache_ids
+            self._cache_ids = jnp.asarray(self.plan.cache_ids)
+            self._refresh(res)
+        self._pending_replan = False
         res.replans += 1
         res.replan_rounds.append(rnd)
         res.plan_miss_capacities.append(self.plan.miss_capacity)
+        self.telemetry.inc("serve.replans")
+        self.telemetry.inc("serve.replans", cause=cause)
+        self.telemetry.set("serve.predicted_miss_rate",
+                           self.plan.predicted_miss_rate)
+        self.telemetry.event("serve.replan", round=rnd, cause=cause,
+                             capacity=self.cache_capacity,
+                             miss_capacity=self.plan.miss_capacity,
+                             demand=self.plan.demand)
 
     def _refresh(self, res: ServeResult) -> None:
         # eager on purpose (emulated): the XLA CPU backend lowers the
@@ -268,6 +497,7 @@ class ServingRuntime:
         self._cache_rows = resolve(self.backend).refresh_rows(
             self.table, self._cache_ids)
         res.refreshes += 1
+        self.telemetry.inc("serve.refreshes")
 
     # ----------------------------------------------------------------- run
     def run(self, stream, rounds: int, *,
@@ -288,15 +518,17 @@ class ServingRuntime:
         from the latency/throughput accounting (the miss trace always
         covers every round).
 
-        With ``cfg.double_buffer`` the loop is a one-slot pipeline: the
-        round's batch is probed and *dispatched*, then the previous
+        With double-buffered admission the loop is a one-slot pipeline:
+        the round's batch is probed and *dispatched*, then the previous
         round's batch is blocked and bookkept — so the device executes
         batch t while the host enqueues, replans and probes batch t+1.
-        ``double_buffer=False`` blocks each batch in its own round (the
-        serial reference; identical results, no overlap)."""
+        Serial mode blocks each batch in its own round (identical
+        results, no overlap)."""
         cfg = self.cfg
+        if cfg.managed and not self._calibrated:
+            self._calibrate_overlap()
         if warmup_backlog is None:
-            warmup_backlog = cfg.replan_every + 2
+            warmup_backlog = self.replan_every + 2
         res = ServeResult()
         drift = False
         last_replan = -10 ** 9
@@ -319,6 +551,7 @@ class ServingRuntime:
                                     time.perf_counter())
         t0 = time.perf_counter()
         for rnd in range(rounds):
+            rnd_t0 = time.perf_counter()
             res.rounds += 1
             self.queue.enqueue_many(stream.arrivals(rnd + warmup_backlog),
                                     time.perf_counter())
@@ -329,27 +562,34 @@ class ServingRuntime:
                     inflight = None
                 self.scheduler.latency.reset()
                 self.scheduler.n_served = 0
+                self._epoch_t0 = None
                 t0 = time.perf_counter()
 
             if cfg.managed:
-                self.planner.observe_round(rnd)
-                # replan on: cadence, drift feedback, or window exhaustion
-                # (each round consumes one tick of the plan's queued
-                # horizon — running past it would serve batches the miss
-                # bound never saw, the serving `should_replan` analogue);
-                # replan_every=0 disables both scheduled triggers
-                scheduled = cfg.replan_every > 0 and (
-                    rnd - last_replan >= cfg.replan_every
-                    or (self.plan is not None and rnd - last_replan
-                        >= max(1, self.plan.window[1] - 1)))
-                if (self.plan is None or drift or scheduled) \
-                        and len(self.queue):
-                    self._replan(rnd, res)
+                self.planner.observe_round(self._lifetime_rounds + rnd)
+                # replan on: cadence, drift feedback, a pending resize, or
+                # window exhaustion (each round consumes one tick of the
+                # plan's queued horizon — running past it would serve
+                # batches the miss bound never saw, the serving
+                # `should_replan` analogue); replan_every=0 disables both
+                # scheduled triggers
+                window_done = (self.plan is not None
+                               and rnd - last_replan
+                               >= max(1, self.plan.window[1] - 1))
+                scheduled = self.replan_every > 0 and (
+                    rnd - last_replan >= self.replan_every or window_done)
+                if (self.plan is None or drift or self._pending_replan
+                        or scheduled) and len(self.queue):
+                    cause = ("initial" if self.plan is None else
+                             "drift" if drift else
+                             "resize" if self._pending_replan else
+                             "window" if window_done else "cadence")
+                    self._replan(rnd, res, cause)
                     last_replan = rnd
                     drift = False
-                elif self.plan is not None and cfg.refresh_every > 0 \
+                elif self.plan is not None and self.refresh_every > 0 \
                         and rnd - last_replan > 0 \
-                        and (rnd - last_replan) % cfg.refresh_every == 0:
+                        and (rnd - last_replan) % self.refresh_every == 0:
                     self._refresh(res)
 
             batch = self.scheduler.admit(self.queue)
@@ -390,6 +630,7 @@ class ServingRuntime:
                 nv = len(batch.reqs)
                 miss_rate = float(1.0 - hit_h[:nv].mean())
                 res.miss_trace.append((rnd, miss_rate))
+                self.telemetry.set("serve.miss_rate", miss_rate)
                 row_over = over_h[:nv].any(axis=1)
                 served_mask = ~row_over
                 served = [r for r, o in zip(batch.reqs, row_over) if not o]
@@ -397,6 +638,8 @@ class ServingRuntime:
                 if failed:
                     res.overflow_batches += 1
                     res.requeues += len(failed)
+                    self.telemetry.inc("serve.overflow_batches")
+                    self.telemetry.inc("serve.requeues", len(failed))
                     for req in failed:
                         if req.attempts + 1 > cfg.max_attempts:
                             raise RuntimeError(
@@ -417,8 +660,11 @@ class ServingRuntime:
                 trash_slot = probe.buf_ids.shape[0]
                 zeroed = ((probe.buf_slot == trash_slot)
                           & ~probe.hit).reshape(B, K)
-                res.zero_served += int(
+                n_zeroed = int(
                     np.count_nonzero(zeroed[:nv].any(axis=1) & served_mask))
+                res.zero_served += n_zeroed
+                if n_zeroed:
+                    self.telemetry.inc("serve.zero_served", n_zeroed)
             else:
                 out = self._plain_fn(self.table, jnp.asarray(batch.tokens))
                 served_mask = np.ones(len(batch.reqs), bool)
@@ -431,16 +677,24 @@ class ServingRuntime:
                 out, batch.reqs, served, served_mask, batch.tokens.shape)
             if prev is not None:
                 finish(prev)
-            if not cfg.double_buffer:
+            if not self.double_buffer:
                 finish(inflight)
                 inflight = None
+            self.telemetry.observe(
+                "serve.round_ms", (time.perf_counter() - rnd_t0) * 1e3)
 
         if inflight is not None:             # drain the pipeline
             finish(inflight)
+        self._lifetime_rounds += rounds
         res.wall_s = time.perf_counter() - t0
         res.throughput_rps = self.scheduler.n_served / max(res.wall_s, 1e-9)
         lat = self.scheduler.latency
         res.p50_ms = lat.percentile(50) * 1e3
         res.p99_ms = lat.percentile(99) * 1e3
         res.mean_ms = lat.mean() * 1e3
+        res.knobs = self.current_knobs()
+        self.telemetry.set("serve.throughput_rps", res.throughput_rps)
+        if cfg.summary and not self._summary_printed:
+            print(self.summary())
+            self._summary_printed = True
         return res

@@ -21,6 +21,17 @@ ladder is small (powers of two) so recompiles amortize away.
 ``LoopResult.overflows`` counts steps whose actual unique-miss count
 exceeded the plan's capacity (forcing the lookup's dense fallback); with
 exact intent this stays 0 — the planner's bound is exact.
+
+Zero-tuning (DESIGN.md §13): ``cache_capacity`` and ``refresh_every``
+accept ``"auto"`` (the default) and are then owned by the online
+controller — capacity follows the planning window's cache-worthy demand
+(`PlacementPlan.demand`, the intent signal) over power-of-two buckets,
+resized exactly at replan boundaries (the managed lookup is exact
+regardless of cache contents, so resizes can never change the loss
+trajectory — they only move misses); refresh cadence is hill-climbed on
+measured loss-drop per second (the convergence-rate reward).  Progress
+signals (step latency, loss, plans, refreshes, overflows, resizes) are
+published to the `repro.obs.telemetry` bus (``train.*`` records).
 """
 
 from __future__ import annotations
@@ -28,7 +39,7 @@ from __future__ import annotations
 import os
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +49,9 @@ from repro.ckpt import checkpoint
 from repro.configs.base import ModelConfig
 from repro.data.pipeline import IntentSignalingLoader
 from repro.models.model import init_model
+from repro.obs.telemetry import Telemetry
+from repro.pm.controller import (AUTO, Knob, OnlineController,
+                                 capacity_ladder, is_auto, resolve_knob)
 from repro.pm.embedding import make_state
 from repro.pm.planner import IntentPlanner, PlacementPlan
 from repro.train.steps import make_opt_init, make_train_step
@@ -59,12 +73,18 @@ class LoopConfig:
     #                                  and runs the shard_map psum path
     model_shards: int = 0            # mesh size for collective="mesh"
     #                                  (0 = every local device)
-    cache_capacity: int = 256
+    cache_capacity: Union[int, str] = AUTO  # replica-cache rows; "auto"
+    #                                  (the default): steered by the
+    #                                  planning window's intent demand
+    #                                  over power-of-two buckets
     n_shards: int = 1
     prefetch: int = 16
     plan_every: int = 8
-    refresh_every: int = 1           # replica sync cadence (steps); replan
-    #                                  rounds always refresh
+    refresh_every: Union[int, str] = AUTO  # replica sync cadence (steps);
+    #                                  replan rounds always refresh.
+    #                                  "auto": hill-climbed on measured
+    #                                  loss-drop/s (starts at 1, the old
+    #                                  hand-set default)
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 0
     init_from: Optional[str] = None  # checkpoint dir to restore from
@@ -79,12 +99,18 @@ class LoopResult:
     refreshes: int = 0               # replica-cache sync rounds
     overflows: int = 0               # steps with unique misses > capacity
     recompiles: int = 0
+    capacity_resizes: int = 0        # mid-run replica-cache bucket changes
     start_step: int = 0              # first step index (restored runs)
     wall_s: float = 0.0
+    knobs: Dict[str, object] = field(default_factory=dict)
+    #   the loop's knob values at the end of the run (auto knobs land
+    #   wherever the controller drove them)
 
 
-def train_loop(cfg: ModelConfig, lc: LoopConfig) -> LoopResult:
+def train_loop(cfg: ModelConfig, lc: LoopConfig,
+               telemetry: Optional[Telemetry] = None) -> LoopResult:
     t0 = time.time()
+    bus = telemetry if telemetry is not None else Telemetry()
     key = jax.random.PRNGKey(lc.seed)
     params = init_model(cfg, key)
     opt_state = make_opt_init(lc.optimizer)(params)
@@ -120,8 +146,34 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig) -> LoopResult:
             lambda a: backend.place_table(a)
             if a.shape == params["embed"].shape else a, opt_state)
 
-    planner = IntentPlanner(cfg.vocab_size, lc.cache_capacity,
-                            n_shards=max(1, lc.n_shards),
+    # ---- knob resolution: "auto" fields belong to the controller
+    auto = {name for name, v in (("cache_capacity", lc.cache_capacity),
+                                 ("refresh_every", lc.refresh_every))
+            if is_auto(v)}
+    cap_ladder = capacity_ladder(cfg.vocab_size)
+    cache_capacity = int(resolve_knob(lc.cache_capacity, cap_ladder[0]))
+    refresh_every = int(resolve_knob(lc.refresh_every, 1))
+    ctl: Optional[OnlineController] = None
+    if lc.pm and auto:
+        knobs = []
+        if "cache_capacity" in auto:
+            # intent-steered, not hill-climbed: the window's demand
+            # computes the bucket directly (controller.steer_capacity)
+            knobs.append(Knob("cache_capacity", cap_ladder,
+                              index=cap_ladder.index(cache_capacity),
+                              adapt=False, prefer_low=True))
+        if "refresh_every" in auto:
+            # 0 = replan rounds only; >0 adds a between-replan cadence
+            ladder = (0, 1, 2, 4, 8)
+            knobs.append(Knob("refresh_every", ladder,
+                              index=ladder.index(refresh_every),
+                              prefer_low=True))
+        ctl = OnlineController(knobs, bus, seed=lc.seed)
+
+    # n_nodes = the training data shards signaling intent (§4.1 nodes):
+    # a key wanted by >= 2 shards in the window is concurrent intent
+    planner = IntentPlanner(cfg.vocab_size, cache_capacity,
+                            n_nodes=max(1, lc.n_shards),
                             plan_every=lc.plan_every,
                             per_node_bound=backend is not None
                             ) if lc.pm else None
@@ -153,17 +205,52 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig) -> LoopResult:
     plan: Optional[PlacementPlan] = None
     cache_ids = None
     cache_rows = None
+    # controller reward epochs: measured between replan boundaries
+    epoch_t0: Optional[float] = None
+    epoch_loss: Optional[float] = None
 
     for step, batch in loader:
         if step >= lc.steps:
             break
+        step_t0 = time.perf_counter()
         if planner is not None:
             planner.observe_round(step)
             replanned = False
             if planner.should_replan(step, plan):
+                # measured hill-climb decision at the boundary: reward is
+                # the epoch's loss-drop per second (convergence rate)
+                now = time.perf_counter()
+                if ctl is not None and epoch_t0 is not None \
+                        and res.losses:
+                    cur = float(np.mean(res.losses[-lc.plan_every:]))
+                    if epoch_loss is not None and now > epoch_t0:
+                        reward = (epoch_loss - cur) / (now - epoch_t0)
+                        bus.set("ctl.reward", reward)
+                        for name, v in ctl.observe(reward).items():
+                            if name == "refresh_every":
+                                refresh_every = int(v)
+                    epoch_loss = cur
+                elif ctl is not None and res.losses:
+                    epoch_loss = float(np.mean(res.losses[-lc.plan_every:]))
+                epoch_t0 = now
                 plan = planner.plan(step)
+                if ctl is not None and "cache_capacity" in auto:
+                    # intent-signal capacity steering: the window's demand
+                    # count IS the bucket; a changed bucket re-plans over
+                    # the same signals so plan and cache stay consistent
+                    new_cap = ctl.steer_capacity("cache_capacity",
+                                                 plan.demand)
+                    if new_cap is not None:
+                        cache_capacity = int(new_cap)
+                        planner.set_capacity(cache_capacity)
+                        res.capacity_resizes += 1
+                        bus.inc("train.capacity_resizes")
+                        bus.event("train.capacity_resize", step=step,
+                                  capacity=cache_capacity)
+                        plan = planner.plan(step)
                 cache_ids = jnp.asarray(plan.cache_ids)
                 res.plans += 1
+                bus.inc("train.plans")
                 replanned = True
                 planner.gc(step)
             # replica sync round: re-gather hot rows from the live table —
@@ -171,11 +258,12 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig) -> LoopResult:
             # cadence), NOT every step; replicas in between are at most one
             # refresh round stale (pm/embedding.py docstring bound)
             if replanned or cache_rows is None or (
-                    lc.refresh_every > 0
-                    and step % lc.refresh_every == 0):
+                    refresh_every > 0
+                    and step % refresh_every == 0):
                 state = make_state(params["embed"], cache_ids, backend)
                 cache_rows = state.cache_rows
                 res.refreshes += 1
+                bus.inc("train.refreshes")
             batch = dict(batch,
                          pm_cache_ids=cache_ids.astype(jnp.int32),
                          pm_cache_rows=cache_rows)
@@ -188,11 +276,15 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig) -> LoopResult:
                 n_miss = np.setdiff1d(uniq, plan.cache_ids).size
                 if n_miss > plan.miss_capacity:
                     res.overflows += 1
+                    bus.inc("train.overflows")
             fn = step_fn(plan.miss_capacity)
         else:
             fn = step_fn(0)
         loss, params, opt_state = fn(params, opt_state, batch)
         res.losses.append(float(loss))
+        bus.set("train.loss", float(loss))
+        bus.observe("train.step_ms",
+                    (time.perf_counter() - step_t0) * 1e3)
         if lc.log_every and step % lc.log_every == 0:
             print(f"step {step:5d}  loss {float(loss):.4f}")
         if lc.ckpt_dir and lc.ckpt_every and step and \
@@ -202,4 +294,7 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig) -> LoopResult:
 
     res.recompiles = len(step_fns)
     res.wall_s = time.time() - t0
+    res.knobs = {"cache_capacity": cache_capacity,
+                 "refresh_every": refresh_every,
+                 "plan_every": lc.plan_every}
     return res
