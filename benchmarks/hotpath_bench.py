@@ -60,6 +60,7 @@ import numpy as np
 from repro.data.pipeline import SyntheticCorpus
 from repro.kernels import ops, ref
 from repro.kernels.pm_forward import probe_and_compact, step_residual
+from repro.obs import JsonlSink, Telemetry, make_tracer
 from repro.pm.controller import Knob, OnlineController, capacity_ladder
 from repro.pm.planner import _bucket
 
@@ -153,8 +154,9 @@ def _paired_medians(legacy, fused, table, accum, iters: int):
     return float(np.median(tl) * 1e6), float(np.median(tf) * 1e6)
 
 
-def _bench_entries(dims: dict, skews) -> List[dict]:
+def _bench_entries(dims: dict, skews, tracer=None, bus=None) -> List[dict]:
     V, B, S, C = dims["V"], dims["B"], dims["S"], dims["C"]
+    tr = make_tracer(False, tracer=tracer)
     entries = []
     for zipf_a in skews:
         corpus = SyntheticCorpus(V, zipf_a=zipf_a, seed=0)
@@ -171,8 +173,14 @@ def _bench_entries(dims: dict, skews) -> List[dict]:
             cache_rows = jnp.take(table, cache_ids, axis=0)
             legacy, fused = _make_steps(table, accum, cache_ids,
                                         cache_rows, tokens, M, V)
-            lus, fus = _paired_medians(legacy, fused, table, accum,
-                                       dims["iters"])
+            # span args: a=D, b=zipf*10 (int slots — see obs.trace)
+            with tr.span("hotpath.shape", a=D, b=int(zipf_a * 10)):
+                lus, fus = _paired_medians(legacy, fused, table, accum,
+                                           dims["iters"])
+            if bus is not None:
+                bus.set("hotpath.legacy_us", lus, zipf=zipf_a, D=D)
+                bus.set("hotpath.fused_us", fus, zipf=zipf_a, D=D)
+                bus.set("hotpath.speedup", lus / fus, zipf=zipf_a, D=D)
             entries.append(dict(zipf=zipf_a, D=D, V=V, T=B * S, M=M,
                                 legacy_us=round(lus, 1),
                                 fused_us=round(fus, 1),
@@ -256,11 +264,16 @@ def _headline(entries: List[dict]) -> dict:
             "speedup_zipf1.0_median": round(float(np.median(at10)), 3)}
 
 
-def run(quick: bool = False) -> List[str]:
+def run(quick: bool = False, trace_path: str = None,
+        metrics_path: str = None) -> List[str]:
     """Benchmark-harness entry point (also wired into `benchmarks.run`).
     Full runs refresh both the full-scale entries and the CI-scale quick
     entries; ``--quick`` refreshes only the quick section (preserving any
-    committed full entries)."""
+    committed full entries).  ``trace_path``/``metrics_path`` export
+    per-shape measurement spans and the per-shape medians as Chrome
+    trace / JSONL (DESIGN.md §14)."""
+    tracer = make_tracer(bool(trace_path))
+    bus = Telemetry() if metrics_path else None
     doc = {}
     if os.path.exists(_OUT):
         with open(_OUT) as f:
@@ -273,10 +286,10 @@ def run(quick: bool = False) -> List[str]:
     rows = []
     if not quick:
         doc["config"] = {k: v for k, v in FULL.items()}
-        doc["entries"] = _bench_entries(FULL, SKEWS_FULL)
+        doc["entries"] = _bench_entries(FULL, SKEWS_FULL, tracer, bus)
         doc["headline"] = _headline(doc["entries"])
     doc["quick_config"] = {k: v for k, v in QUICK.items()}
-    doc["quick_entries"] = _bench_entries(QUICK, SKEWS_QUICK)
+    doc["quick_entries"] = _bench_entries(QUICK, SKEWS_QUICK, tracer, bus)
     doc["quick_headline"] = _headline(doc["quick_entries"])
     auto_entries = _auto_entries(QUICK, SKEWS_QUICK)
     doc["auto"] = {
@@ -292,6 +305,13 @@ def run(quick: bool = False) -> List[str]:
     with open(_OUT, "w") as f:
         json.dump(doc, f, indent=1)
     print(f"wrote {os.path.relpath(_OUT)}")
+    if trace_path:
+        tracer.dump(trace_path)
+        print(f"wrote {trace_path} ({tracer.count} spans)")
+    if metrics_path:
+        with JsonlSink(metrics_path) as sink:
+            sink.write_bus(bus, label="hotpath_bench")
+        print(f"wrote {metrics_path}")
     for e in doc.get("entries", []) + doc["quick_entries"]:
         rows.append(f"hotpath,managed_step,zipf{e['zipf']}_D{e['D']},"
                     f"speedup,{e['speedup']}")
@@ -396,8 +416,14 @@ if __name__ == "__main__":
     ap.add_argument("--auto", action="store_true",
                     help="with --check-baseline: guard the zero-tuning "
                     "arm (demand-steered capacity vs hand-tuned, paired)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write per-shape measurement spans as Chrome "
+                         "trace JSON")
+    ap.add_argument("--metrics-out", metavar="PATH", default=None,
+                    help="write per-shape medians as JSONL telemetry")
     args = ap.parse_args()
     if args.check_baseline:
         raise SystemExit(check_auto(args.check_baseline) if args.auto
                          else check_baseline(args.check_baseline))
-    run(quick=args.quick)
+    run(quick=args.quick, trace_path=args.trace,
+        metrics_path=args.metrics_out)

@@ -94,13 +94,15 @@ def _rows(summary) -> List[str]:
     return rows
 
 
-def _reexec(quick: bool) -> List[str]:
+def _reexec(quick: bool, trace_path=None, metrics_path=None) -> List[str]:
     """Re-launch this module under a forced multi-device host platform
     (XLA flags are read once at jax init, so the parent process cannot
     grow devices in place).  The marker env var bounds this to ONE
     attempt: on hosts where the flag cannot raise the device count (e.g.
     a single-GPU default backend) the child fails loudly instead of
-    forking an endless re-exec chain."""
+    forking an endless re-exec chain.  Observability paths ride along as
+    absolute paths — the child runs with cwd at the repo root, which may
+    differ from the caller's."""
     if os.environ.get("_MESH_BENCH_REEXEC"):
         raise RuntimeError(
             f"still fewer than {N_DEV} devices after forcing "
@@ -114,6 +116,10 @@ def _reexec(quick: bool) -> List[str]:
     cmd = [sys.executable, "-m", "benchmarks.mesh_bench"]
     if quick:
         cmd.append("--quick")
+    if trace_path:
+        cmd += ["--trace", os.path.abspath(trace_path)]
+    if metrics_path:
+        cmd += ["--metrics-out", os.path.abspath(metrics_path)]
     subprocess.run(cmd, check=True, env=env,
                    cwd=os.path.join(os.path.dirname(
                        os.path.abspath(__file__)), ".."))
@@ -212,16 +218,18 @@ def _paired_step_medians(legacy, fused, table, accum, iters: int):
     return float(np.median(tl) * 1e6), float(np.median(tf) * 1e6)
 
 
-def _fused_arm(quick: bool):
+def _fused_arm(quick: bool, tracer=None, bus=None):
     """The ISSUE 6 acceptance measurement: routed fused step vs the PR-4
     replica, per Zipf skew, on the 8-device mesh."""
     import jax.numpy as jnp
 
     from repro.data.pipeline import SyntheticCorpus
     from repro.launch.mesh import make_model_mesh
+    from repro.obs import make_tracer
     from repro.pm.collectives import MeshBackend
     from repro.pm.embedding import make_state, probe_host
 
+    tr = make_tracer(False, tracer=tracer)
     backend = MeshBackend(make_model_mesh(N_DEV))
     rng = np.random.default_rng(0)
     table = backend.place_table(
@@ -240,8 +248,14 @@ def _fused_arm(quick: bool):
         legacy, fused = _make_step_pair(backend, jnp.asarray(cache_ids),
                                         st.cache_rows,
                                         jnp.asarray(tokens), M)
-        lus, fus = _paired_step_medians(legacy, fused, table, accum,
-                                        iters)
+        with tr.span("mesh.fused_skew", a=int(zipf_a * 10), b=M):
+            lus, fus = _paired_step_medians(legacy, fused, table, accum,
+                                            iters)
+        if bus is not None:
+            bus.set("mesh.fused_legacy_us", round(lus, 1), zipf=zipf_a)
+            bus.set("mesh.fused_us", round(fus, 1), zipf=zipf_a)
+            bus.set("mesh.fused_speedup", round(lus / fus, 3),
+                    zipf=zipf_a)
         entries.append(dict(zipf=zipf_a, M=M,
                             legacy_step_us=round(lus, 1),
                             fused_step_us=round(fus, 1),
@@ -256,12 +270,13 @@ def _geomean(vals):
     return float(np.exp(np.mean(np.log(list(vals)))))
 
 
-def _run_local(quick: bool):
+def _run_local(quick: bool, trace_path=None, metrics_path=None):
     import jax
     import jax.numpy as jnp
 
     from repro.data.pipeline import SyntheticCorpus
     from repro.launch.mesh import make_model_mesh
+    from repro.obs import JsonlSink, Telemetry, make_tracer
     from repro.pm.collectives import MeshBackend
     from repro.pm.embedding import (make_state, plain_serve_lookup,
                                     planned_serve_lookup, pm_lookup,
@@ -269,6 +284,8 @@ def _run_local(quick: bool):
 
     from .common import time_fn
 
+    tracer = make_tracer(bool(trace_path))
+    bus = Telemetry() if metrics_path else None
     t_start = time.time()
     backend = MeshBackend(make_model_mesh(N_DEV))
     rng = np.random.default_rng(0)
@@ -299,11 +316,18 @@ def _run_local(quick: bool):
                (probe.buf_ids, probe.hit.astype(np.int32),
                 probe.cache_slot, probe.buf_slot)]
         tok_dev = jnp.asarray(tokens)
-        managed_us = time_fn(
-            lambda: managed_fn(table, st.cache_rows, *idx),
-            iters=iters, block=jax.block_until_ready)
-        plain_us = time_fn(lambda: plain_fn(table, tok_dev),
-                           iters=iters, block=jax.block_until_ready)
+        with tracer.span("mesh.lookup_skew", a=int(zipf_a * 10), b=M):
+            managed_us = time_fn(
+                lambda: managed_fn(table, st.cache_rows, *idx),
+                iters=iters, block=jax.block_until_ready)
+            plain_us = time_fn(lambda: plain_fn(table, tok_dev),
+                               iters=iters, block=jax.block_until_ready)
+        if bus is not None:
+            bus.set("mesh.managed_us", round(managed_us, 1), zipf=zipf_a)
+            bus.set("mesh.plain_us", round(plain_us, 1), zipf=zipf_a)
+            bus.set("mesh.speedup",
+                    round(plain_us / max(managed_us, 1e-9), 2),
+                    zipf=zipf_a)
 
         # training closure: fwd+bwd through the mesh VJP (psum forward,
         # psum_scatter backward) vs the dense gather/scatter
@@ -331,7 +355,7 @@ def _run_local(quick: bool):
             "train_fwd_bwd_plain_us": round(train_p_us, 1),
         })
 
-    fused_entries = _fused_arm(quick)
+    fused_entries = _fused_arm(quick, tracer=tracer, bus=bus)
     summary = {
         "config": {"vocab": V, "dim": D, "tokens_per_batch": B * K,
                    "cache_capacity": C, "devices": N_DEV,
@@ -354,14 +378,22 @@ def _run_local(quick: bool):
     with open(_OUT, "w") as f:
         json.dump(summary, f, indent=1)
     print(f"wrote {os.path.normpath(_OUT)}")
+    if trace_path:
+        tracer.dump(trace_path)
+        print(f"wrote {trace_path} ({tracer.count} spans)")
+    if metrics_path:
+        with JsonlSink(metrics_path) as sink:
+            sink.write_bus(bus, label="mesh_bench")
+        print(f"wrote {metrics_path}")
     return summary
 
 
-def run(quick: bool = False) -> List[str]:
+def run(quick: bool = False, trace_path=None,
+        metrics_path=None) -> List[str]:
     import jax
     if len(jax.devices()) < N_DEV:
-        return _reexec(quick)
-    return _rows(_run_local(quick))
+        return _reexec(quick, trace_path, metrics_path)
+    return _rows(_run_local(quick, trace_path, metrics_path))
 
 
 def check_baseline(path: str) -> int:
@@ -443,7 +475,14 @@ if __name__ == "__main__":
                     help="regression guard: compare the fused arm "
                     "against a committed BENCH_mesh.json instead of "
                     "writing results")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write per-skew spans as Chrome trace-event "
+                    "JSON to PATH")
+    ap.add_argument("--metrics-out", metavar="PATH", default=None,
+                    help="write per-skew gauges as schema-versioned "
+                    "JSONL to PATH")
     args = ap.parse_args()
     if args.check_baseline:
         raise SystemExit(check_baseline(args.check_baseline))
-    run(quick=args.quick)
+    run(quick=args.quick, trace_path=args.trace,
+        metrics_path=args.metrics_out)

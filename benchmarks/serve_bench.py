@@ -41,6 +41,17 @@ CLI: ``python -m benchmarks.serve_bench [--quick] [--auto]
 a CI-sized arm and fails on a >15% paired regression vs the committed
 numbers (with ``--auto``: the auto-vs-tuned ratio arm instead of the
 managed-vs-plain arms).
+
+Observability (DESIGN.md §14): ``--trace PATH`` / ``--metrics-out PATH``
+run one extra fully-traced managed arm after the measured sections (so
+tracing never perturbs the headline numbers) and write the Chrome trace
+and the JSONL metrics/attribution sink — the artifacts ``python -m
+repro.obs.report`` renders and CI uploads.  ``--check-trace-overhead``
+measures tracing's enabled cost: alternating traced-vs-untraced runs on
+the frozen tuned config (controller nondeterminism excluded), pooling
+every run's per-round latencies per arm and comparing pooled medians
+against ``TRACE_OVERHEAD_TOL`` (2%) discounted by an inline A/A drift
+measurement (see ``check_trace_overhead``).
 """
 
 from __future__ import annotations
@@ -54,6 +65,7 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.obs import JsonlSink, SpanTracer
 from repro.pm.controller import AUTO
 from repro.serve import (DriftingZipfStream, ReplayStream, ServeConfig,
                          ServingRuntime)
@@ -89,6 +101,9 @@ BACKLOG = 10             # warmup backlog rounds enqueued before round 0:
 STEADY_WINDOW = 5        # rounds of pre-rotation steady state
 REGRESSION_TOL = 1.15    # --check-baseline: fail beyond a 15% slowdown
 AUTO_MIN_RATIO = 0.9     # acceptance (d): auto >= 0.9x hand-tuned
+TRACE_OVERHEAD_TOL = 1.02  # --check-trace-overhead: tracing at default
+#                            sampling may cost at most 2% pooled-median
+#                            round latency (DESIGN.md §14 overhead budget)
 
 # The PR-6 hand-set values, FROZEN as the zero-tuning section's reference
 # arm only — the operating config below carries no tuned knobs.  Do not
@@ -270,7 +285,93 @@ def _auto_section(table, skews: List[float], reps: int) -> Dict:
     }
 
 
-def run(quick: bool = False) -> List[str]:
+def _traced_arm(table, trace_path, metrics_path) -> None:
+    """One fully-traced managed run on a drifting trace, AFTER the
+    measured sections: writes the Chrome trace and the JSONL
+    metrics/attribution sink (the report CLI's and CI's artifacts)."""
+    replay = _record(1.1, 12)
+    tracer = SpanTracer()
+    rt = ServingRuntime(table, _tuned_cfg(), tracer=tracer)
+    res = rt.run(replay, ROUNDS, warmup_backlog=BACKLOG,
+                 measure_from=MEASURE_FROM)
+    assert len(rt.attribution.records) == res.replans, \
+        "one attribution record per replan boundary"
+    if trace_path:
+        tracer.dump(trace_path)
+        print(f"wrote {trace_path} ({tracer.count} spans, "
+              f"{tracer.dropped} dropped)")
+    if metrics_path:
+        with JsonlSink(metrics_path) as sink:
+            sink.write_bus(rt.telemetry, label="serve_bench traced arm")
+            sink.write_attribution(rt.attribution.records)
+        print(f"wrote {metrics_path}")
+
+
+def check_trace_overhead(reps: int = 6) -> None:
+    """CI guard for the §14 overhead budget: tracing enabled at default
+    sampling must cost < 2% paired-median serve round latency.
+
+    Estimator: both arms run the frozen tuned config (no controller
+    nondeterminism) on the same replayed trace in alternating order, and
+    every run's per-round ``serve.round_ms`` samples are POOLED per arm —
+    the verdict is the ratio of pooled medians.  Per-run aggregates
+    (throughput, per-run p50) were A/A-calibrated on this container at a
+    multi-percent noise floor — they cannot resolve a 2% effect; pooling
+    ~`reps x ROUNDS` rounds per arm tightens the median substantially.
+    The residual session noise is measured inline by splitting the
+    untraced runs into two interleaved halves (an A/A ratio): a real
+    tracing regression shows up in A/B but not A/A, so the pass bound is
+    discounted by the measured drift.  One best-of-two retry rides out
+    co-tenant bursts."""
+    rng = np.random.default_rng(0)
+    table = rng.normal(size=(V, D)).astype(np.float32)
+    replay = _record(1.1, 0)
+    warm = _warm(table, _tuned_cfg(), replay)
+
+    def rounds_ms(traced: bool) -> List[float]:
+        rt = ServingRuntime(table, replace(_tuned_cfg(), trace=traced))
+        rt._managed_fn = warm._managed_fn
+        rt._plain_fn = warm._plain_fn
+        rt.run(replay, ROUNDS, warmup_backlog=BACKLOG,
+               measure_from=MEASURE_FROM)
+        return rt.telemetry.latency("serve.round_ms").values()
+
+    def measure():
+        traced_pool: List[float] = []
+        untraced_halves = ([], [])      # interleaved split: the A/A floor
+        for i in range(reps):
+            if i % 2 == 0:
+                traced_pool += rounds_ms(True)
+                un = rounds_ms(False)
+            else:
+                un = rounds_ms(False)
+                traced_pool += rounds_ms(True)
+            untraced_halves[i % 2].extend(un)
+        untraced_pool = untraced_halves[0] + untraced_halves[1]
+        ab = float(np.median(traced_pool) / np.median(untraced_pool))
+        aa = float(np.median(untraced_halves[0])
+                   / np.median(untraced_halves[1]))
+        return ab, max(aa, 1.0 / aa)
+
+    ab, noise = measure()
+    bound = TRACE_OVERHEAD_TOL * noise
+    if ab > bound:                       # best-of-two: co-tenant bursts
+        ab2, noise2 = measure()
+        if ab2 <= TRACE_OVERHEAD_TOL * noise2:
+            ab, noise, bound = ab2, noise2, TRACE_OVERHEAD_TOL * noise2
+    if ab > bound:
+        raise SystemExit(
+            f"trace overhead regression: traced/untraced pooled-median "
+            f"round latency {ab:.4f}x > {bound:.4f}x "
+            f"(budget {TRACE_OVERHEAD_TOL:.2f}x, measured A/A drift "
+            f"{noise:.4f}x)")
+    print(f"trace overhead ok: traced/untraced pooled-median round "
+          f"latency {ab:.4f}x (bound {bound:.4f}x = budget "
+          f"{TRACE_OVERHEAD_TOL:.2f}x * A/A drift {noise:.4f}x)")
+
+
+def run(quick: bool = False, trace_path: str = None,
+        metrics_path: str = None) -> List[str]:
     t_start = time.time()
     rows: List[str] = []
     skews = [1.0, 1.1] if quick else [1.0, 1.1, 1.5]
@@ -392,6 +493,8 @@ def run(quick: bool = False) -> List[str]:
     with open(_OUT, "w") as f:
         json.dump(summary, f, indent=1)
     print(f"wrote {os.path.normpath(_OUT)}")
+    if trace_path or metrics_path:
+        _traced_arm(table, trace_path, metrics_path)
     emit(rows, "serve", "managed", "ALL", "min_speedup_x",
          round(min(speedups), 2))
     emit(rows, "serve", "managed", "ALL", "zero_served", zero_served_total)
@@ -497,8 +600,20 @@ if __name__ == "__main__":
     ap.add_argument("--check-baseline", metavar="JSON", default=None,
                     help="re-measure a small arm and fail on a >15%% "
                          "paired regression vs the committed numbers")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a fully-traced arm's Chrome trace JSON")
+    ap.add_argument("--metrics-out", metavar="PATH", default=None,
+                    help="write the traced arm's telemetry + attribution "
+                         "records as schema-versioned JSONL")
+    ap.add_argument("--check-trace-overhead", action="store_true",
+                    help="fail if tracing at default sampling costs >2%% "
+                         "paired-median throughput")
     args = ap.parse_args()
     if args.check_baseline:
         check_baseline(args.check_baseline, auto=args.auto)
         sys.exit(0)
-    run(quick=args.quick)
+    if args.check_trace_overhead:
+        check_trace_overhead()
+        sys.exit(0)
+    run(quick=args.quick, trace_path=args.trace,
+        metrics_path=args.metrics_out)

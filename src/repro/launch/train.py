@@ -50,6 +50,9 @@ def main(argv=None):
     ap.add_argument("--init-from", default=None,
                     help="checkpoint to restore from: a step_* directory "
                          "or a --ckpt-dir root (newest step is used)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write per-phase spans (signal/plan/refresh/step) "
+                         "as Chrome trace-event JSON to PATH")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -61,7 +64,18 @@ def main(argv=None):
                     refresh_every=args.refresh_every,
                     ckpt_dir=args.ckpt_dir,
                     ckpt_every=args.ckpt_every, init_from=args.init_from)
-    res = train_loop(cfg, lc)
+    tracer = None
+    if args.trace:
+        from repro.obs.trace import SpanTracer
+        tracer = SpanTracer()
+    res = train_loop(cfg, lc, tracer=tracer)
+    if tracer is not None:
+        tracer.dump(args.trace)
+        from repro.obs.report import render_report
+        print(render_report(tracer.to_chrome()["traceEvents"],
+                            title="train shutdown report"))
+        print(f"trace: {args.trace} ({tracer.count} spans, "
+              f"{tracer.dropped} dropped)")
     print(f"done: {len(res.losses)} steps, final loss "
           f"{res.losses[-1]:.4f}, {res.plans} placement plans, "
           f"{res.refreshes} replica refreshes, {res.overflows} overflow "

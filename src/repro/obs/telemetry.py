@@ -39,6 +39,29 @@ import numpy as np
 _RESERVOIR_MAXLEN = 4096
 
 
+def json_safe(obj):
+    """Recursively convert ``obj`` into plain JSON types: numpy scalars
+    and arrays become Python numbers/lists, non-finite floats become
+    None (JSON has no NaN/Inf), dict keys become strings.  The bus
+    accepts whatever producers publish (counters bumped with np.int64,
+    events carrying array fields), so every export surface —
+    `Telemetry.snapshot`, the JSONL sink, attribution records — funnels
+    through this to stay strictly `json.dumps`-able."""
+    if isinstance(obj, dict):
+        return {str(k): json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [json_safe(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return [json_safe(v) for v in obj.tolist()]
+    if isinstance(obj, (np.integer, np.bool_)):
+        return obj.item()
+    if isinstance(obj, np.floating):
+        obj = float(obj)
+    if isinstance(obj, float):
+        return obj if np.isfinite(obj) else None
+    return obj
+
+
 class Counter:
     """Monotonically increasing count (overflows, replans, requeues)."""
 
@@ -97,7 +120,14 @@ class Reservoir:
     def count(self) -> int:
         return self._n
 
+    def values(self) -> List[float]:
+        """Copy of the held samples (the serve bench pools these across
+        paired runs for its trace-overhead estimator)."""
+        return list(self._vals)
+
     def percentile(self, p: float) -> float:
+        # empty-safe by contract: 0.0, never a raise or NaN (callers ask
+        # for p50/p99 at shutdown whether or not anything was observed)
         if not self._vals:
             return 0.0
         return float(np.percentile(np.asarray(self._vals), p))
@@ -109,7 +139,13 @@ class Reservoir:
         self._vals.clear()
         self._n = 0
 
+    _EMPTY_STATS = {"count": 0, "mean": 0.0, "p50": 0.0, "p99": 0.0}
+
     def stats(self) -> Dict[str, float]:
+        """p50/p99 summary; an untouched reservoir returns the
+        well-defined all-zero record (count distinguishes it)."""
+        if not self._vals:
+            return dict(self._EMPTY_STATS, count=self.count)
         return {"count": self.count, "mean": round(self.mean(), 6),
                 "p50": round(self.percentile(50), 6),
                 "p99": round(self.percentile(99), 6)}
@@ -132,16 +168,39 @@ class Telemetry:
         self._reservoirs: Dict[str, Reservoir] = {}
         self._events: List[Tuple[int, str, dict]] = []
         self._seq = 0
+        # flat key -> (name, labels): exact label structure for exporters
+        # (the flat key is lossy — a label value may itself contain "="
+        # or "," — so Prometheus rendering reads this, not the key)
+        self._meta: Dict[str, Tuple[str, dict]] = {}
 
     # ------------------------------------------------------------ handles
     def counter(self, name: str, **labels) -> Counter:
-        return self._counters.setdefault(_key(name, labels), Counter())
+        k = _key(name, labels)
+        c = self._counters.get(k)
+        if c is None:
+            c = self._counters[k] = Counter()
+            self._meta[k] = (name, labels)
+        return c
 
     def gauge(self, name: str, **labels) -> Gauge:
-        return self._gauges.setdefault(_key(name, labels), Gauge())
+        k = _key(name, labels)
+        g = self._gauges.get(k)
+        if g is None:
+            g = self._gauges[k] = Gauge()
+            self._meta[k] = (name, labels)
+        return g
 
     def latency(self, name: str, **labels) -> Reservoir:
-        return self._reservoirs.setdefault(_key(name, labels), Reservoir())
+        k = _key(name, labels)
+        r = self._reservoirs.get(k)
+        if r is None:
+            r = self._reservoirs[k] = Reservoir()
+            self._meta[k] = (name, labels)
+        return r
+
+    def key_meta(self, flat_key: str) -> Tuple[str, dict]:
+        """(name, labels) for a flat snapshot key (exporter surface)."""
+        return self._meta.get(flat_key, (flat_key, {}))
 
     # --------------------------------------------------------- one-liners
     def inc(self, name: str, n: float = 1, **labels) -> None:
@@ -174,15 +233,17 @@ class Telemetry:
 
     # ----------------------------------------------------------- exports
     def snapshot(self) -> dict:
-        """JSON-ready dump of the whole bus (bench/test surface)."""
-        return {
+        """JSON-ready dump of the whole bus (bench/test surface).
+        Strictly `json.dumps`-able: event fields and values pass through
+        `json_safe` (producers publish numpy scalars freely)."""
+        return json_safe({
             "counters": {k: c.value for k, c in sorted(
                 self._counters.items())},
             "gauges": {k: g.value for k, g in sorted(self._gauges.items())},
             "latencies": {k: r.stats() for k, r in sorted(
                 self._reservoirs.items())},
             "events": self.events(),
-        }
+        })
 
     def summary_line(self, prefix: str = "telemetry") -> str:
         """The single human-readable shutdown line: headline counters,

@@ -189,8 +189,10 @@ class OnlineController:
         self._cancel_trial(name)
         self._unsettle()
         knob.index = idx
+        # `target` rides along: the triggering signal (e.g. the intent
+        # demand count), so attribution records show WHY the knob moved
         self.telemetry.event("ctl.force", knob=name, value=knob.value,
-                             cause=cause)
+                             cause=cause, target=int(target))
         return knob.value
 
     def steer_capacity(self, name: str, demand: int,
@@ -217,7 +219,8 @@ class OnlineController:
                             if v >= target), len(knob.ladder) - 1)
                 knob.index = idx
                 self.telemetry.event("ctl.force", knob=name,
-                                     value=knob.value, cause="demand_low")
+                                     value=knob.value, cause="demand_low",
+                                     target=int(target))
                 return knob.value
         else:
             self._low_streak[name] = 0
@@ -230,6 +233,7 @@ class OnlineController:
         in-flight trial (accept or revert) or proposes the next move;
         returns the knob values the caller must apply ({} = no change)."""
         self.decisions += 1
+        self.telemetry.set("ctl.decisions", self.decisions)
         changed: Dict[str, object] = {}
         if self._trial is not None:
             t, self._trial = self._trial, None

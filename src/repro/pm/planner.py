@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core.engine import concurrent_intent, intent_miss_bound
 from repro.core.timing import ActionTimer
+from repro.obs.telemetry import Telemetry
 
 
 @dataclass(frozen=True)
@@ -72,7 +73,8 @@ class IntentPlanner:
                  n_nodes: Optional[int] = None, plan_every: int = 8,
                  per_node_bound: bool = False, owner_shards: int = 0,
                  alpha: float = 0.1, p: float = 0.9999, lam0: float = 10.0,
-                 n_shards: Optional[int] = None):
+                 n_shards: Optional[int] = None,
+                 telemetry: Optional[Telemetry] = None):
         # ``n_nodes`` is the number of §4.1 *nodes* intent signals arrive
         # from — what counts as a node depends on the caller: the training
         # loop's data shards, or the serving runtime's requester slots
@@ -112,6 +114,11 @@ class IntentPlanner:
         self._intents: Dict[int, List[np.ndarray]] = {}
         self._version = 0
         self._last_planned_step = -1
+        # optional shared bus (DESIGN.md §13): the planner publishes what
+        # each plan promised (``plan.*`` gauges) on the SAME bus the
+        # runtime/controller use — callers pass their runtime's bus, so
+        # there is never a second, divergent bus
+        self.telemetry = telemetry
 
     @property
     def n_shards(self) -> int:
@@ -215,7 +222,7 @@ class IntentPlanner:
         miss_rate = (float(np.mean(~np.isin(keys, hot)))
                      if len(keys) else 0.0)
         self._version += 1
-        return PlacementPlan(
+        plan = PlacementPlan(
             version=self._version,
             cache_ids=cache_ids,
             miss_capacity=_bucket(worst_miss),
@@ -224,6 +231,18 @@ class IntentPlanner:
             route_capacity=self._route_capacity(keys, steps, hot),
             demand=int(np.count_nonzero(score > 0)),
         )
+        if self.telemetry is not None:
+            self.telemetry.set("plan.version", plan.version)
+            self.telemetry.set("plan.predicted_miss_rate",
+                               plan.predicted_miss_rate)
+            self.telemetry.set("plan.miss_capacity", plan.miss_capacity)
+            self.telemetry.set("plan.demand", plan.demand)
+            self.telemetry.event("plan.built", version=plan.version,
+                                 window=list(window),
+                                 predicted=plan.predicted_miss_rate,
+                                 miss_capacity=plan.miss_capacity,
+                                 demand=plan.demand)
+        return plan
 
     def _route_capacity(self, keys: np.ndarray, steps: np.ndarray,
                         hot: np.ndarray) -> int:

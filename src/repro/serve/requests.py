@@ -38,6 +38,8 @@ class ServeRequest:
     keys: np.ndarray
     t_enqueue: float = 0.0
     attempts: int = 0
+    tenant: str = "default"      # accounting label only (no admission
+    #   policy): per-tenant serve.requests/latency/requeued telemetry
 
 
 class DriftingZipfStream:
@@ -130,7 +132,7 @@ class ReplayStream:
     def arrivals(self, rnd: int) -> List[ServeRequest]:
         if rnd >= len(self.per_round):
             return []
-        return [ServeRequest(r.rid, r.keys)
+        return [ServeRequest(r.rid, r.keys, tenant=r.tenant)
                 for r in self.per_round[rnd]]
 
 

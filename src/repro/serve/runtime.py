@@ -78,7 +78,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import StreamingIntentBuffer
+from repro.obs.attribution import PlanAttribution
 from repro.obs.telemetry import Telemetry
+from repro.obs.trace import SpanTracer, make_tracer
 from repro.pm.collectives import resolve
 from repro.pm.controller import (AUTO, Knob, OnlineController, capacity_ladder,
                                  is_auto, overlap_pays, pow2_ladder,
@@ -128,6 +130,12 @@ class ServeConfig:
     max_attempts: int = 8        # loud failure, never a silent zero row
     summary: bool = True         # print the one-line telemetry summary at
     #   the end of the runtime's first run (the shutdown line)
+    trace: bool = False          # span tracing (DESIGN.md §14): default
+    #   OFF — disabled call sites cost one early-return branch; enabled
+    #   at trace_sample=1.0 the serve bench pins the cost under 2%
+    trace_sample: float = 1.0    # deterministic per-rid sampling for
+    #   request spans (phase spans always record when tracing is on)
+    trace_capacity: int = 1 << 15  # span ring size (oldest spans evicted)
     seed: int = 0
 
 
@@ -183,11 +191,16 @@ class ServingRuntime:
     """Queue -> intent -> plan -> execute, one micro-batch per round."""
 
     def __init__(self, table, cfg: ServeConfig,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 tracer: Optional[SpanTracer] = None):
         self.cfg = cfg
         self.table = jnp.asarray(table)
         assert self.table.shape[0] == cfg.vocab
         self.telemetry = telemetry if telemetry is not None else Telemetry()
+        # span tracer: an injected instance wins (the bench shares one
+        # across runtimes); otherwise built from the cfg — default off
+        self.tracer = make_tracer(cfg.trace, cfg.trace_sample,
+                                  cfg.trace_capacity, tracer)
         from repro.pm.collectives import make_backend
         self.backend = make_backend(cfg.collective, cfg.model_shards)
         if self.backend is not None:
@@ -232,7 +245,8 @@ class ServingRuntime:
         self.intent = StreamingIntentBuffer() if cfg.managed else None
         self.queue = RequestQueue(self.intent)
         self.scheduler = MicroBatchScheduler(self.batch_requests,
-                                             cfg.keys_per_request)
+                                             cfg.keys_per_request,
+                                             telemetry=self.telemetry)
         # mesh collective: admission is additionally bounded PER OWNER
         # SHARD — the planner publishes `route_capacity` (the exact
         # per-(step,owner) unique-miss bound over the queued horizon) and
@@ -251,7 +265,14 @@ class ServingRuntime:
             cfg.vocab, self.cache_capacity,
             n_nodes=self.batch_requests,
             plan_every=self.replan_every,
-            owner_shards=self._owner_shards) if cfg.managed else None
+            owner_shards=self._owner_shards,
+            telemetry=self.telemetry) if cfg.managed else None
+        # plan-vs-actual audit trail (DESIGN.md §14): only when traced —
+        # one record per replan boundary, over the same bus
+        self.attribution: Optional[PlanAttribution] = (
+            PlanAttribution(owner_shards=self._owner_shards,
+                            vocab=cfg.vocab, telemetry=self.telemetry)
+            if cfg.managed and self.tracer.enabled else None)
         self.plan: Optional[PlacementPlan] = None
         self._cache_ids = None           # device copy (refresh input)
         self._cache_ids_np = None        # host copy (admission-time probe)
@@ -387,6 +408,21 @@ class ServingRuntime:
                 f"overflows={int(t.counter_value('serve.overflow_batches'))}"
                 f" miss_rate~{t.gauge_value('serve.miss_rate', 0.0):.3f}")
 
+    def report(self) -> str:
+        """The traced run's full shutdown report (latency/attribution/
+        knob-timeline — the same renderer ``python -m repro.obs.report``
+        applies to exported files)."""
+        from repro.obs.report import render_report
+        records = [dict({"kind": "event"}, name=ev.pop("_name"),
+                        event_seq=ev.pop("_seq"), fields=ev)
+                   for ev in self.telemetry.events()]
+        if self.attribution is not None:
+            records.extend(dict(r.to_json(), kind="attribution")
+                           for r in self.attribution.records)
+        return render_report(
+            self.tracer.to_chrome()["traceEvents"] or None,
+            records or None, title="serve shutdown report")
+
     def resize_capacity(self, cache_capacity: int) -> None:
         """Mid-run replica-cache resize (the controller's hook; also
         public for operators/tests).  Takes effect atomically at the next
@@ -442,6 +478,7 @@ class ServingRuntime:
 
     # ---------------------------------------------------------------- plan
     def _replan(self, rnd: int, res: ServeResult, cause: str) -> None:
+        old_plan = self.plan     # the tenure the attribution flush closes
         self._controller_step(rnd, res)
         keys, slots, ticks = self.intent.snapshot(
             self.queue.order_ids(), self.batch_requests)
@@ -487,6 +524,13 @@ class ServingRuntime:
                              capacity=self.cache_capacity,
                              miss_capacity=self.plan.miss_capacity,
                              demand=self.plan.demand)
+        if self.attribution is not None:
+            # close the OUTGOING plan's tenure: its promise vs the batches
+            # that executed under it (None before the first replan)
+            self.attribution.flush(
+                rnd=rnd, plan=old_plan, cause=cause,
+                knobs=self.current_knobs(), capacity=self.cache_capacity,
+                miss_capacity=self.plan.miss_capacity)
 
     def _refresh(self, res: ServeResult) -> None:
         # eager on purpose (emulated): the XLA CPU backend lowers the
@@ -533,10 +577,27 @@ class ServingRuntime:
         drift = False
         last_replan = -10 ** 9
         inflight: Optional[_InFlight] = None
+        tr = self.tracer
 
         def finish(fl: _InFlight) -> None:
-            out = jax.block_until_ready(fl.out)
+            with tr.span("serve.served", a=len(fl.served)):
+                out = jax.block_until_ready(fl.out)
             now = time.perf_counter()
+            if tr.enabled:
+                # per-request lifecycle spans (enqueue -> served): t0 is
+                # the enqueue stamp — perf_counter and perf_counter_ns
+                # share an origin, so the seconds clock converts exactly;
+                # the whole batch lands as one batched ring append
+                t0s, rids, atts, tids = [], [], [], []
+                for r in fl.served:
+                    if tr.sampled(r.rid):
+                        t0s.append(int(r.t_enqueue * 1e9))
+                        rids.append(r.rid)
+                        atts.append(r.attempts)
+                        tids.append(1 + r.rid % 8)
+                if rids:
+                    tr.record_many("serve.request", t0s, tr.now_ns(),
+                                   tids=tids, a=rids, b=atts)
             self.scheduler.note_served(fl.served, now)
             self.queue.served(fl.served)
             res.served += len(fl.served)
@@ -547,14 +608,18 @@ class ServingRuntime:
                         res.outputs[req.rid] = out_h[i]
 
         for rnd in range(-warmup_backlog, 0):
-            self.queue.enqueue_many(stream.arrivals(rnd + warmup_backlog),
-                                    time.perf_counter())
+            with tr.span("serve.enqueue", a=rnd):
+                self.queue.enqueue_many(
+                    stream.arrivals(rnd + warmup_backlog),
+                    time.perf_counter())
         t0 = time.perf_counter()
         for rnd in range(rounds):
             rnd_t0 = time.perf_counter()
             res.rounds += 1
-            self.queue.enqueue_many(stream.arrivals(rnd + warmup_backlog),
-                                    time.perf_counter())
+            with tr.span("serve.enqueue", a=rnd):
+                self.queue.enqueue_many(
+                    stream.arrivals(rnd + warmup_backlog),
+                    time.perf_counter())
             if rnd == measure_from:
                 # drain the pipeline before the measurement window opens
                 if inflight is not None:
@@ -584,7 +649,8 @@ class ServingRuntime:
                              "drift" if drift else
                              "resize" if self._pending_replan else
                              "window" if window_done else "cadence")
-                    self._replan(rnd, res, cause)
+                    with tr.span("serve.plan", a=rnd):
+                        self._replan(rnd, res, cause)
                     last_replan = rnd
                     drift = False
                 elif self.plan is not None and self.refresh_every > 0 \
@@ -611,26 +677,32 @@ class ServingRuntime:
                 route_cap = (min(self.plan.route_capacity,
                                  self.plan.miss_capacity)
                              if self._owner_shards else 0)
-                probe = probe_host(self._cache_ids_np,
-                                   batch.tokens.reshape(B * K),
-                                   self.plan.miss_capacity,
-                                   owner_shards=self._owner_shards,
-                                   route_capacity=route_cap,
-                                   vocab=cfg.vocab)
-                # one packed H2D transfer for the three (T,) index arrays
-                idx = jnp.asarray(np.stack([
-                    probe.hit.astype(np.int32), probe.cache_slot,
-                    probe.buf_slot]))
-                out = self._managed_fn(route_cap)(
-                    self.table, self._cache_rows,
-                    jnp.asarray(probe.buf_ids), idx[0], idx[1], idx[2],
-                    jnp.int32(probe.n_miss))
+                with tr.span("serve.probe", a=rnd):
+                    probe = probe_host(self._cache_ids_np,
+                                       batch.tokens.reshape(B * K),
+                                       self.plan.miss_capacity,
+                                       owner_shards=self._owner_shards,
+                                       route_capacity=route_cap,
+                                       vocab=cfg.vocab)
+                with tr.span("serve.dispatch", a=rnd):
+                    # one packed H2D transfer for the three (T,) index
+                    # arrays
+                    idx = jnp.asarray(np.stack([
+                        probe.hit.astype(np.int32), probe.cache_slot,
+                        probe.buf_slot]))
+                    out = self._managed_fn(route_cap)(
+                        self.table, self._cache_rows,
+                        jnp.asarray(probe.buf_ids), idx[0], idx[1], idx[2],
+                        jnp.int32(probe.n_miss))
                 hit_h = probe.hit.reshape(B, K)
                 over_h = probe.overflow.reshape(B, K)
                 nv = len(batch.reqs)
                 miss_rate = float(1.0 - hit_h[:nv].mean())
                 res.miss_trace.append((rnd, miss_rate))
                 self.telemetry.set("serve.miss_rate", miss_rate)
+                if self.attribution is not None:
+                    self.attribution.note_batch(batch.tokens[:nv],
+                                                hit_h[:nv])
                 row_over = over_h[:nv].any(axis=1)
                 served_mask = ~row_over
                 served = [r for r, o in zip(batch.reqs, row_over) if not o]
@@ -641,6 +713,12 @@ class ServingRuntime:
                     self.telemetry.inc("serve.overflow_batches")
                     self.telemetry.inc("serve.requeues", len(failed))
                     for req in failed:
+                        self.telemetry.inc("serve.requeued",
+                                           tenant=req.tenant)
+                        if tr.enabled and tr.sampled(req.rid):
+                            tr.point("serve.requeue",
+                                     tid=1 + req.rid % 8, a=req.rid,
+                                     b=req.attempts + 1)
                         if req.attempts + 1 > cfg.max_attempts:
                             raise RuntimeError(
                                 f"request {req.rid} overflowed the miss "
@@ -682,6 +760,12 @@ class ServingRuntime:
                 inflight = None
             self.telemetry.observe(
                 "serve.round_ms", (time.perf_counter() - rnd_t0) * 1e3)
+            if tr.enabled:
+                # the executed round's envelope (idle rounds have no
+                # batch and no envelope — the phase spans still show);
+                # rnd_t0 converts exactly: shared perf_counter origin
+                tr.record("serve.round", int(rnd_t0 * 1e9), tr.now_ns(),
+                          a=rnd)
 
         if inflight is not None:             # drain the pipeline
             finish(inflight)
@@ -696,5 +780,7 @@ class ServingRuntime:
         self.telemetry.set("serve.throughput_rps", res.throughput_rps)
         if cfg.summary and not self._summary_printed:
             print(self.summary())
+            if tr.enabled:
+                print(self.report())
             self._summary_printed = True
         return res

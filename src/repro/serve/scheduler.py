@@ -22,6 +22,7 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from repro.core.api import LatencyRecorder  # noqa: F401  (re-export)
+from repro.obs.telemetry import Telemetry
 
 from .requests import RequestQueue, ServeRequest
 
@@ -44,10 +45,12 @@ class MicroBatchScheduler:
     counted in the queued-intent horizon, so they cannot push the batch
     past the planner's exact miss bound."""
 
-    def __init__(self, batch_requests: int, keys_per_request: int):
+    def __init__(self, batch_requests: int, keys_per_request: int,
+                 telemetry: Optional[Telemetry] = None):
         self.B = batch_requests
         self.K = keys_per_request
         self.latency = LatencyRecorder()
+        self.telemetry = telemetry
         self.n_served = 0
         self.n_batches = 0
 
@@ -74,6 +77,13 @@ class MicroBatchScheduler:
     def note_served(self, reqs: Sequence[ServeRequest],
                     now: Optional[float] = None) -> None:
         now = time.perf_counter() if now is None else now
+        bus = self.telemetry
         for req in reqs:
-            self.latency.record(now - req.t_enqueue)
+            dt = now - req.t_enqueue
+            self.latency.record(dt)
+            if bus is not None:
+                # per-tenant accounting (labels are distinct bus keys;
+                # no admission policy reads these — accounting only)
+                bus.inc("serve.requests", tenant=req.tenant)
+                bus.observe("serve.latency", dt * 1e3, tenant=req.tenant)
         self.n_served += len(reqs)

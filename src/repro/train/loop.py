@@ -50,6 +50,7 @@ from repro.configs.base import ModelConfig
 from repro.data.pipeline import IntentSignalingLoader
 from repro.models.model import init_model
 from repro.obs.telemetry import Telemetry
+from repro.obs.trace import SpanTracer, make_tracer
 from repro.pm.controller import (AUTO, Knob, OnlineController,
                                  capacity_ladder, is_auto, resolve_knob)
 from repro.pm.embedding import make_state
@@ -108,9 +109,13 @@ class LoopResult:
 
 
 def train_loop(cfg: ModelConfig, lc: LoopConfig,
-               telemetry: Optional[Telemetry] = None) -> LoopResult:
+               telemetry: Optional[Telemetry] = None,
+               tracer: Optional[SpanTracer] = None) -> LoopResult:
     t0 = time.time()
     bus = telemetry if telemetry is not None else Telemetry()
+    # per-phase span tracing (DESIGN.md §14): default-off no-op unless
+    # the caller injects an enabled tracer (launch/train.py --trace)
+    tr = make_tracer(False, tracer=tracer)
     key = jax.random.PRNGKey(lc.seed)
     params = init_model(cfg, key)
     opt_state = make_opt_init(lc.optimizer)(params)
@@ -172,11 +177,14 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig,
 
     # n_nodes = the training data shards signaling intent (§4.1 nodes):
     # a key wanted by >= 2 shards in the window is concurrent intent
+    # the planner, controller and loop publish on ONE shared bus — the
+    # caller's `telemetry` (or this run's fresh one), never a second,
+    # divergent bus (mirrors ServingRuntime's explicit telemetry= arg)
     planner = IntentPlanner(cfg.vocab_size, cache_capacity,
                             n_nodes=max(1, lc.n_shards),
                             plan_every=lc.plan_every,
-                            per_node_bound=backend is not None
-                            ) if lc.pm else None
+                            per_node_bound=backend is not None,
+                            telemetry=bus) if lc.pm else None
     loader = IntentSignalingLoader(
         cfg, lc.batch, lc.seq, n_shards=max(1, lc.n_shards),
         prefetch=lc.prefetch, planner=planner, seed=lc.seed)
@@ -209,7 +217,17 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig,
     epoch_t0: Optional[float] = None
     epoch_loss: Optional[float] = None
 
-    for step, batch in loader:
+    it = iter(loader)
+    while True:
+        # the loader's __next__ IS the intent-signaling phase: pulling a
+        # batch signals its (and the prefetch horizon's) ids
+        _t_sig = tr.now_ns() if tr.enabled else 0
+        try:
+            step, batch = next(it)
+        except StopIteration:
+            break
+        if tr.enabled:
+            tr.record("train.signal", _t_sig, tr.now_ns(), a=step)
         if step >= lc.steps:
             break
         step_t0 = time.perf_counter()
@@ -217,6 +235,7 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig,
             planner.observe_round(step)
             replanned = False
             if planner.should_replan(step, plan):
+                _t_plan = tr.now_ns() if tr.enabled else 0
                 # measured hill-climb decision at the boundary: reward is
                 # the epoch's loss-drop per second (convergence rate)
                 now = time.perf_counter()
@@ -253,6 +272,8 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig,
                 bus.inc("train.plans")
                 replanned = True
                 planner.gc(step)
+                if tr.enabled:
+                    tr.record("train.plan", _t_plan, tr.now_ns(), a=step)
             # replica sync round: re-gather hot rows from the live table —
             # once per refresh round (replan rounds + the refresh_every
             # cadence), NOT every step; replicas in between are at most one
@@ -260,8 +281,9 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig,
             if replanned or cache_rows is None or (
                     refresh_every > 0
                     and step % refresh_every == 0):
-                state = make_state(params["embed"], cache_ids, backend)
-                cache_rows = state.cache_rows
+                with tr.span("train.refresh", a=step):
+                    state = make_state(params["embed"], cache_ids, backend)
+                    cache_rows = state.cache_rows
                 res.refreshes += 1
                 bus.inc("train.refreshes")
             batch = dict(batch,
@@ -280,13 +302,15 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig,
             fn = step_fn(plan.miss_capacity)
         else:
             fn = step_fn(0)
-        loss, params, opt_state = fn(params, opt_state, batch)
-        res.losses.append(float(loss))
-        bus.set("train.loss", float(loss))
+        with tr.span("train.step", a=step):
+            loss, params, opt_state = fn(params, opt_state, batch)
+            loss_f = float(loss)   # blocks: the span covers real step time
+        res.losses.append(loss_f)
+        bus.set("train.loss", loss_f)
         bus.observe("train.step_ms",
                     (time.perf_counter() - step_t0) * 1e3)
         if lc.log_every and step % lc.log_every == 0:
-            print(f"step {step:5d}  loss {float(loss):.4f}")
+            print(f"step {step:5d}  loss {loss_f:.4f}")
         if lc.ckpt_dir and lc.ckpt_every and step and \
                 step % lc.ckpt_every == 0:
             checkpoint.save(f"{lc.ckpt_dir}/step_{step:07d}",
