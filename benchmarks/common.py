@@ -10,6 +10,8 @@ from __future__ import annotations
 import time
 from typing import Callable, Dict, List, Optional
 
+import numpy as np
+
 from repro.core.api import (CostModel, LatencyRecorder,  # noqa: F401
                             Metrics)
 #   LatencyRecorder: the shared percentile/latency recorder (also used by
@@ -108,3 +110,68 @@ def time_fn(fn: Callable, *, iters: int = 5, warmup: int = 1,
     if block is not None:
         block(out)
     return (time.perf_counter() - t0) / iters * 1e6
+
+
+def paired_pooled_ratio(run_base: Callable[[], List[float]],
+                        run_test: Callable[[], List[float]],
+                        *, reps: int = 6) -> Dict[str, float]:
+    """The PR-8 paired-arm estimator, shared (DESIGN.md §14/§15): both
+    arms run back-to-back per rep in alternating order (cancels slow
+    machine drift), every run's per-round/per-iter samples are POOLED
+    per arm, and the verdict is the ratio of pooled medians — per-run
+    aggregates on a small shared container have a multi-percent noise
+    floor and cannot resolve single-digit effects; pooling
+    ``reps x rounds`` samples tightens the median substantially.
+
+    Residual session noise is measured inline: the *base* arm's runs
+    split into two interleaved halves whose median ratio is an A/A
+    measurement — a real regression moves A/B but not A/A, so callers
+    discount their tolerance by ``drift``.
+
+    Returns ``{"ratio": median(test)/median(base), "drift": A/A >= 1,
+    "median_base", "median_test", "samples_per_arm"}``."""
+    test_pool: List[float] = []
+    base_halves: tuple = ([], [])
+    for i in range(reps):
+        if i % 2 == 0:
+            test_pool += list(run_test())
+            base = list(run_base())
+        else:
+            base = list(run_base())
+            test_pool += list(run_test())
+        base_halves[i % 2].extend(base)
+    base_pool = base_halves[0] + base_halves[1]
+    ratio = float(np.median(test_pool) / np.median(base_pool))
+    aa = (float(np.median(base_halves[0]) / np.median(base_halves[1]))
+          if base_halves[0] and base_halves[1] else 1.0)
+    return {"ratio": ratio, "drift": float(max(aa, 1.0 / aa)),
+            "median_base": float(np.median(base_pool)),
+            "median_test": float(np.median(test_pool)),
+            "samples_per_arm": min(len(base_pool), len(test_pool))}
+
+
+def paired_guard(label: str, run_base: Callable[[], List[float]],
+                 run_test: Callable[[], List[float]], *, tol: float,
+                 reps: int = 6, best_of: int = 2) -> Dict[str, float]:
+    """CI regression guard over `paired_pooled_ratio`: the test arm's
+    pooled-median latency may exceed the base arm's by at most ``tol``
+    (a ratio, e.g. 1.15) discounted by the measured A/A drift.  Samples
+    are latencies — lower is better.  ``best_of`` full re-measurements
+    ride out co-tenant bursts before the guard fails the build
+    (`SystemExit`, the benches' guard convention)."""
+    res = paired_pooled_ratio(run_base, run_test, reps=reps)
+    for _ in range(best_of - 1):
+        if res["ratio"] <= tol * res["drift"]:
+            break
+        res = paired_pooled_ratio(run_base, run_test, reps=reps)
+    bound = tol * res["drift"]
+    if res["ratio"] > bound:
+        raise SystemExit(
+            f"{label}: paired pooled-median regression "
+            f"{res['ratio']:.4f}x > {bound:.4f}x (budget {tol:.2f}x * "
+            f"A/A drift {res['drift']:.4f}x, "
+            f"{res['samples_per_arm']} samples/arm)")
+    print(f"{label} ok: paired pooled-median ratio {res['ratio']:.4f}x "
+          f"(bound {bound:.4f}x = budget {tol:.2f}x * A/A drift "
+          f"{res['drift']:.4f}x)")
+    return res

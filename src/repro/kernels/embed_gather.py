@@ -5,7 +5,10 @@ KGE / CTR rows).  TPU adaptation: instead of per-key RPCs, the gather is a
 scalar-prefetched blocked copy — the row ids live in SMEM (scalar
 prefetch), the table stays HBM-resident (``memory_space=ANY``), and each
 grid program issues one guarded async DMA per row of its
-``(block_r, block_d)`` output tile.  Multi-row tiling shrinks the grid
+``(block_r, block_d)`` output tile, double-buffered over two DMA
+semaphores so row r+1's fetch is in flight while row r completes (the
+intra-tile half of the ISSUE-9 prefetch pipeline).  Multi-row tiling
+shrinks the grid
 ~block_r× versus the old one-row-per-program layout; the MXU is not
 involved; the kernel is bandwidth-bound by design, and block_d is a
 multiple of the (8, 128) VREG lane layout — non-aligned feature dims are
@@ -25,19 +28,36 @@ from .blocking import pad_d, pick_blocks
 
 
 def _gather_kernel(ids_ref, table_ref, out_ref, sem):
+    # double-buffered row prefetch: the copy for row r+1 is started before
+    # the wait on row r, so the next row's HBM fetch overlaps the current
+    # row's completion instead of serializing start->wait per row.  The
+    # two DMAs alternate over a 2-deep semaphore array; start and wait
+    # pair up by reconstructing the same copy descriptor (equal
+    # parameters -> same semaphore slot).
     i, j = pl.program_id(0), pl.program_id(1)
     block_r, block_d = out_ref.shape
     n = ids_ref.shape[0]
+
+    def copy(r, slot):
+        row = i * block_r + r
+        return pltpu.make_async_copy(
+            table_ref.at[ids_ref[row], pl.ds(j * block_d, block_d)],
+            out_ref.at[r], sem.at[slot])
+
+    @pl.when(i * block_r < n)
+    def _():
+        copy(0, 0).start()
+
     for r in range(block_r):
         row = i * block_r + r
+        if r + 1 < block_r:
+            @pl.when(row + 1 < n)
+            def _():
+                copy(r + 1, (r + 1) % 2).start()
 
         @pl.when(row < n)
         def _():
-            dma = pltpu.make_async_copy(
-                table_ref.at[ids_ref[row], pl.ds(j * block_d, block_d)],
-                out_ref.at[r], sem)
-            dma.start()
-            dma.wait()
+            copy(r, r % 2).wait()
 
 
 @functools.partial(jax.jit,
@@ -57,7 +77,7 @@ def _embed_gather(table, ids, block_r: int, block_d: int, interpret: bool):
             in_specs=[pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)],
             out_specs=pl.BlockSpec((block_r, block_d),
                                    lambda i, j, ids_ref: (i, j)),
-            scratch_shapes=[pltpu.SemaphoreType.DMA],
+            scratch_shapes=[pltpu.SemaphoreType.DMA((2,))],
         ),
         out_shape=jax.ShapeDtypeStruct((n, dp), table.dtype),
         interpret=interpret,

@@ -54,6 +54,10 @@ class AttributionRecord:
     capacity: int                # replica-cache capacity at the boundary
     miss_capacity: int           # the new plan's compact-buffer bucket
     knobs: Dict[str, object]     # live knob values at the boundary
+    prefetch_hits: int = 0       # miss slots served from the tenure's
+    #   staged prefetch buffer (DESIGN.md §15)
+    prefetch_stale: int = 0      # miss slots the stage did not cover —
+    #   they paid the residual collective gather
     decisions: List[dict] = field(default_factory=list)
     #   ctl.* / capacity-resize bus events during the tenure (each carries
     #   its own ``cause`` — the triggering signal)
@@ -84,6 +88,8 @@ class AttributionRecord:
             "capacity": self.capacity,
             "miss_capacity": self.miss_capacity,
             "knobs": dict(self.knobs),
+            "prefetch_hits": self.prefetch_hits,
+            "prefetch_stale": self.prefetch_stale,
             "decisions": self.decisions,
         })
 
@@ -107,6 +113,8 @@ class PlanAttribution:
         self._tokens = 0
         self._misses = 0
         self._batches = 0
+        self._prefetch_hits = 0
+        self._prefetch_stale = 0
         self._last_seq = -1      # high-water mark into the bus event log
 
     # ----------------------------------------------------- accumulation
@@ -123,6 +131,13 @@ class PlanAttribution:
         self._misses += missed.size
         if missed.size:
             self._pending.append(missed)
+
+    def note_prefetch(self, hits: int, stale: int) -> None:
+        """One executed batch's staged-prefetch outcome: how many of its
+        unique miss slots the tenure's staging buffer covered (``hits``)
+        vs fell through to the residual collective gather (``stale``)."""
+        self._prefetch_hits += int(hits)
+        self._prefetch_stale += int(stale)
 
     # ----------------------------------------------------------- flush
     def _window_decisions(self) -> List[dict]:
@@ -174,6 +189,8 @@ class PlanAttribution:
             capacity=int(capacity),
             miss_capacity=int(miss_capacity),
             knobs=json_safe(dict(knobs)),
+            prefetch_hits=self._prefetch_hits,
+            prefetch_stale=self._prefetch_stale,
             decisions=self._window_decisions(),
         )
         self.records.append(rec)
@@ -188,4 +205,6 @@ class PlanAttribution:
         self._tokens = 0
         self._misses = 0
         self._batches = 0
+        self._prefetch_hits = 0
+        self._prefetch_stale = 0
         return rec

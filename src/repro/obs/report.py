@@ -108,6 +108,11 @@ def _attribution_section(records: List[dict]) -> List[str]:
                              sorted(owners.items(), key=lambda kv:
                                     int(kv[0])))
             out.append(f"         per-owner misses: {owned}")
+        ph, ps = r.get("prefetch_hits", 0), r.get("prefetch_stale", 0)
+        if ph or ps:
+            total = ph + ps
+            out.append(f"         prefetch: {ph}/{total} miss slots "
+                       f"staged ({ps} residual)")
     if errors:
         out.append(f"  plan-vs-actual |error|: mean "
                    f"{float(np.mean(errors)):.4f}  max "

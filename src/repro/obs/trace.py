@@ -30,6 +30,14 @@ ride in the arrays):
             ``serve.requeue`` instant points (a=rid)
   training  train.signal / train.plan / train.refresh / train.step
             (a=step)
+  prefetch  the ISSUE-9 pipeline stages (DESIGN.md §15):
+            ``prefetch.plan`` — background plan-ahead (an instant at
+            submission, a span when the boundary joins the candidate;
+            a=target step); ``prefetch.refresh`` — the delta replica
+            re-gather that replaced a full train.refresh (a=step);
+            ``prefetch.drain`` — a deferred step's loss block (a=step);
+            ``prefetch.stage`` — the serving tenure's staging-buffer
+            gather (a=round)
 
 `to_chrome()` renders the buffer as Chrome trace-event JSON ("X"
 complete events + "i" instants, ts/dur in microseconds) — loadable in

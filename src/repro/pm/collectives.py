@@ -193,6 +193,20 @@ class EmulatedBackend:
         return ops.masked_embed_gather(table, jnp.clip(ids, 0, V - 1),
                                        ids < V, use_pallas=False)
 
+    def refresh_rows_delta(self, table, cache_rows, ids, slots):
+        """Incremental replica sync: re-gather only ``ids`` (ascending,
+        V-padded) and write them into ``cache_rows`` at ``slots`` (pad
+        slots == C fall off the end and are dropped).  Rows the optimizer
+        did not touch since the last refresh are bitwise unchanged in the
+        table, so skipping them is exact — the delta-refresh gate in
+        `train/loop.py` only takes this path when that holds (sparse
+        AdaGrad, untied embeddings)."""
+        V = table.shape[0]
+        ids = ids.astype(jnp.int32)
+        rows = ops.masked_embed_gather(table, jnp.clip(ids, 0, V - 1),
+                                       ids < V, use_pallas=False)
+        return cache_rows.at[slots.astype(jnp.int32)].set(rows, mode="drop")
+
     def update_rows(self, table, accum, seg_ids, seg_g, *, lr: float,
                     eps: float = 1e-8, kernel: bool = False):
         """Fused sparse AdaGrad over segment slots: ``seg_ids`` are the
@@ -480,6 +494,17 @@ class MeshBackend:
         ids = cache_ids.astype(jnp.int32)
         n_valid = jnp.searchsorted(ids, jnp.int32(table.shape[0]))
         return self.gather_rows_routed(table, ids, n_valid)
+
+    def refresh_rows_delta(self, table, cache_rows, ids, slots):
+        """Incremental replica sync through the routed owner-block
+        gather: only ``ids`` (ascending, V-padded — the layout the router
+        wants) cross the mesh; everything else in ``cache_rows`` is
+        bitwise current already (delta-refresh gate, `train/loop.py`).
+        Pad slots == C drop off the end of the cache buffer."""
+        ids = ids.astype(jnp.int32)
+        n_valid = jnp.searchsorted(ids, jnp.int32(table.shape[0]))
+        rows = self.gather_rows_routed(table, ids, n_valid)
+        return cache_rows.at[slots.astype(jnp.int32)].set(rows, mode="drop")
 
 
 #: module-level default: the training path's single-device reference.

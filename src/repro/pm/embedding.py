@@ -311,21 +311,89 @@ def probe_host(cache_ids, tok, miss_capacity: int, *,
     r = host_compact(cache_ids, tok, miss_capacity)
     overflow = r["overflow"]
     if owner_shards > 0 and route_capacity > 0 and vocab > 0:
-        M = r["buf_ids"].shape[0]
-        nm = min(int(r["n_miss"]), M)
-        ids = np.asarray(r["buf_ids"][:nm], dtype=np.int64)
-        block = -(-vocab // owner_shards)
-        # ascending unique ids -> each owner's ids are one contiguous run;
-        # rank-within-owner is positional (the device router's layout)
-        starts = np.searchsorted(ids, np.arange(owner_shards,
-                                                dtype=np.int64) * block)
-        rank = np.arange(nm) - starts[np.minimum(ids // block,
-                                                 owner_shards - 1)]
-        slot_over = np.zeros(M + 1, dtype=bool)
-        slot_over[:nm] = rank >= min(route_capacity, M)
-        overflow = overflow | (slot_over[r["buf_slot"]] & ~r["hit"])
+        overflow = _route_overflow(r["hit"], r["buf_ids"], r["buf_slot"],
+                                   overflow, int(r["n_miss"]),
+                                   owner_shards, route_capacity, vocab)
     return HostProbe(r["hit"], r["cache_slot"], r["buf_ids"],
                      r["buf_slot"], overflow, int(r["n_miss"]))
+
+
+def _route_overflow(hit, buf_ids, buf_slot, overflow, n_miss: int,
+                    owner_shards: int, route_capacity: int,
+                    vocab: int) -> np.ndarray:
+    """Per-owner overflow flags for the routed miss path (DESIGN.md §12),
+    shared by `probe_host` and `CacheProbeView`: a unique missed id whose
+    rank within its owner shard reaches ``route_capacity`` would not fit
+    the routed per-destination block.  The compact ids are ascending, so
+    each owner's ids are one contiguous run and rank-within-owner is
+    positional (the device router's layout)."""
+    M = buf_ids.shape[0]
+    nm = min(int(n_miss), M)
+    ids = np.asarray(buf_ids[:nm], dtype=np.int64)
+    block = -(-vocab // owner_shards)
+    starts = np.searchsorted(ids, np.arange(owner_shards,
+                                            dtype=np.int64) * block)
+    rank = np.arange(nm) - starts[np.minimum(ids // block,
+                                             owner_shards - 1)]
+    slot_over = np.zeros(M + 1, dtype=bool)
+    slot_over[:nm] = rank >= min(route_capacity, M)
+    return overflow | (slot_over[buf_slot] & ~hit)
+
+
+class CacheProbeView:
+    """Memoized host probe for ONE cache generation (ISSUE 9 satellite).
+
+    `probe_host` re-derives the probe from scratch on every batch — one
+    argsort of the batch tokens PLUS a binary search of every token
+    against the sorted cache ids — even though the cache ids only change
+    once per refresh/replan round.  This view pays one O(V) lookup-table
+    build when the cache generation changes and then probes each batch
+    with two vectorized table reads; the only per-batch sort left is the
+    `np.unique` over the batch's missed tokens, which any compaction
+    needs.  Every `HostProbe` field is byte-identical to `probe_host`
+    (pinned in tests/test_prefetch.py) — `np.unique` returns the missed
+    ids ascending with duplicates sharing one inverse slot, exactly
+    `_compact_math`'s miss-group ranks."""
+
+    def __init__(self, cache_ids: np.ndarray, vocab: int):
+        cache_ids = np.asarray(cache_ids)
+        self.cache_ids = cache_ids
+        self.vocab = int(vocab)
+        C = cache_ids.shape[0]
+        vals = np.arange(self.vocab, dtype=cache_ids.dtype)
+        if C:
+            slot = np.clip(np.searchsorted(cache_ids, vals),
+                           0, C - 1).astype(np.int32)
+            self._slot_lut = slot
+            self._hit_lut = cache_ids[slot] == vals
+        else:
+            self._slot_lut = np.zeros(self.vocab, np.int32)
+            self._hit_lut = np.zeros(self.vocab, bool)
+
+    def probe(self, tok, miss_capacity: int, *, owner_shards: int = 0,
+              route_capacity: int = 0) -> HostProbe:
+        """`probe_host(self.cache_ids, tok, ...)`, via the LUTs."""
+        tok = np.asarray(tok, dtype=np.int32)
+        T = tok.shape[0]
+        M = miss_capacity
+        cache_slot = self._slot_lut[tok]
+        hit = self._hit_lut[tok]
+        miss = ~hit
+        uniq, inverse = np.unique(tok[miss], return_inverse=True)
+        n_miss = int(uniq.shape[0])
+        k = min(n_miss, M)
+        buf_ids = np.zeros(M, np.int32)
+        buf_ids[:k] = uniq[:k]
+        buf_slot = np.full(T, M, np.int32)
+        buf_slot[miss] = np.where(inverse < M, inverse, M).astype(np.int32)
+        overflow = np.zeros(T, bool)
+        overflow[miss] = inverse >= M
+        if owner_shards > 0 and route_capacity > 0 and self.vocab > 0:
+            overflow = _route_overflow(hit, buf_ids, buf_slot, overflow,
+                                       n_miss, owner_shards,
+                                       route_capacity, self.vocab)
+        return HostProbe(hit, cache_slot, buf_ids, buf_slot, overflow,
+                         n_miss)
 
 
 def planned_serve_lookup(table, cache_rows, buf_ids, hit, cache_slot,
@@ -349,3 +417,11 @@ def planned_serve_lookup(table, cache_rows, buf_ids, hit, cache_slot,
                                cache_rows, hit, cache_slot, buf_ids,
                                buf_slot, kernel=kernel, n_miss=n_miss,
                                route_cap=route_cap)
+
+
+# The staged serving dispatch needs no dedicated device fn: the runtime
+# folds the tenure's staging buffer into the cache side (``cache_rows ++
+# staging_rows``, one concat per tenure) and converts staged miss tokens
+# into extended-cache hits at admission, so the device path is
+# `planned_serve_lookup` over the residual bucket alone — no extra
+# gathers or masks per round (DESIGN.md §15).

@@ -27,7 +27,7 @@ workload knowledge.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -183,7 +183,8 @@ class IntentPlanner:
 
     def _build_plan(self, keys: np.ndarray, nodes: np.ndarray,
                     steps: np.ndarray, window: tuple, *,
-                    cache_singles: bool = False) -> PlacementPlan:
+                    cache_singles: bool = False,
+                    commit: bool = True) -> PlacementPlan:
         """Shared §4.1 plan construction over flattened (keys, nodes,
         steps) signals — used by the training-window `plan` and the online
         `replan_from_queue` entry points.
@@ -194,7 +195,13 @@ class IntentPlanner:
         for leftover cache capacity ranked by total demand — on a serving
         node §4.1's *relocation* arm (single active node -> move the value
         to it) degenerates to cache residency, because the requester IS
-        this node; concurrent keys still rank first."""
+        this node; concurrent keys still rank first.
+
+        ``commit=False`` builds a *candidate*: pure arithmetic, no
+        version bump, no telemetry — safe to run off-thread while the
+        training step is in flight (`plan_candidate`).  A candidate
+        becomes the active plan only through `adopt`, which stamps the
+        next version and publishes, ON the caller's thread."""
         # §4.1 via the engine: concurrent intent -> replicate (weighted),
         # single-node intent -> owner path
         uniq, weight, single = concurrent_intent(keys, nodes, steps)
@@ -221,9 +228,8 @@ class IntentPlanner:
             keys, nodes, steps, hot, per_node=self.per_node_bound))
         miss_rate = (float(np.mean(~np.isin(keys, hot)))
                      if len(keys) else 0.0)
-        self._version += 1
         plan = PlacementPlan(
-            version=self._version,
+            version=self._version + 1,
             cache_ids=cache_ids,
             miss_capacity=_bucket(worst_miss),
             window=window,
@@ -231,6 +237,14 @@ class IntentPlanner:
             route_capacity=self._route_capacity(keys, steps, hot),
             demand=int(np.count_nonzero(score > 0)),
         )
+        return self._commit(plan) if commit else plan
+
+    def _commit(self, plan: PlacementPlan) -> PlacementPlan:
+        """Make ``plan`` the planner's next version and publish it —
+        always on the owner's thread (the uncommitted `plan_candidate`
+        path must never touch `_version` or the bus from a worker)."""
+        self._version += 1
+        plan = replace(plan, version=self._version)
         if self.telemetry is not None:
             self.telemetry.set("plan.version", plan.version)
             self.telemetry.set("plan.predicted_miss_rate",
@@ -238,7 +252,7 @@ class IntentPlanner:
             self.telemetry.set("plan.miss_capacity", plan.miss_capacity)
             self.telemetry.set("plan.demand", plan.demand)
             self.telemetry.event("plan.built", version=plan.version,
-                                 window=list(window),
+                                 window=list(plan.window),
                                  predicted=plan.predicted_miss_rate,
                                  miss_capacity=plan.miss_capacity,
                                  demand=plan.demand)
@@ -268,17 +282,58 @@ class IntentPlanner:
         _, cnt = np.unique(grp, return_counts=True)
         return _bucket(int(cnt.max()), floor=16)
 
-    def plan(self, current_step: int) -> PlacementPlan:
-        """Build the plan for [current_step, current_step + lookahead)."""
+    def plan_window(self, current_step: int) -> tuple:
+        """The window `plan(current_step)` would cover right now: one
+        lookahead, clipped to the steps with signals in hand — a window
+        running past the loader's prefetch horizon would under-count
+        misses for the signal-less tail (the bound must stay exact).
+        Exposed so the prefetch pipeline can pin a background candidate's
+        window on the main thread (`max` iterates the intent dict, which
+        only the main thread may do while signals keep arriving)."""
         end = current_step + self.lookahead()
-        # only plan over steps with signals in hand: a window running past
-        # the loader's prefetch horizon would under-count misses for the
-        # signal-less tail (the bound must stay exact)
         if self._intents:
             end = max(current_step + 1,
                       min(end, max(self._intents) + 1))
-        keys, shards, steps = self._window_signals(current_step, end)
-        plan = self._build_plan(keys, shards, steps, (current_step, end))
+        return (current_step, end)
+
+    def plan(self, current_step: int) -> PlacementPlan:
+        """Build the plan for [current_step, current_step + lookahead)."""
+        window = self.plan_window(current_step)
+        keys, shards, steps = self._window_signals(*window)
+        plan = self._build_plan(keys, shards, steps, window)
+        self._last_planned_step = current_step
+        return plan
+
+    # ------------------------------------------------- prefetch pipeline
+    def plan_candidate(self, window: tuple) -> PlacementPlan:
+        """Uncommitted plan over ``window`` — the background half of the
+        plan-ahead pipeline (DESIGN.md §15).  ``window`` must come from a
+        main-thread `plan_window` call at submission time; the build then
+        only issues GIL-atomic ``dict.get`` reads against the signal
+        buffer, and is safe to run concurrently with new signals because
+        a step's signals are inserted in one shot for steps AT OR BEYOND
+        the submission-time window end (the loader's prefetch horizon
+        already covered every step inside it).  No planner state is
+        mutated; the result is inert until `adopt`."""
+        keys, shards, steps = self._window_signals(*window)
+        return self._build_plan(keys, shards, steps, tuple(window),
+                                commit=False)
+
+    def adopt(self, candidate: Optional[PlacementPlan],
+              current_step: int) -> Optional[PlacementPlan]:
+        """Promote a background candidate to the active plan IFF it is
+        exactly the plan a synchronous `plan(current_step)` call would
+        build now: the windows must match (the Alg.-1 horizon — and with
+        it `lookahead` — can shift between submission and the replan
+        boundary via `observe_round`).  On a match, stamp the next
+        version and publish; on a mismatch return None and let the
+        caller fall back to the synchronous build — the pipeline is an
+        optimization, never a semantics change."""
+        if candidate is None:
+            return None
+        if tuple(candidate.window) != self.plan_window(current_step):
+            return None
+        plan = self._commit(candidate)
         self._last_planned_step = current_step
         return plan
 

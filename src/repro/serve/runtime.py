@@ -70,6 +70,7 @@ arithmetic only.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple, Union
 
@@ -85,8 +86,8 @@ from repro.pm.collectives import resolve
 from repro.pm.controller import (AUTO, Knob, OnlineController, capacity_ladder,
                                  is_auto, overlap_pays, pow2_ladder,
                                  resolve_knob)
-from repro.pm.embedding import (plain_serve_lookup, planned_serve_lookup,
-                                probe_host)
+from repro.pm.embedding import (CacheProbeView, plain_serve_lookup,
+                                planned_serve_lookup, probe_host)
 from repro.pm.planner import IntentPlanner, PlacementPlan
 from repro.serve.requests import RequestQueue
 from repro.serve.scheduler import MicroBatchScheduler
@@ -110,14 +111,21 @@ class ServeConfig:
     model_shards: int = 0        # mesh size for collective="mesh"
     #   (0 = every local device)
     kernel: bool = False         # Pallas-backed lookup data path
-    double_buffer: Union[bool, str] = AUTO  # overlap admission with
-    #   execution (one-slot pipeline).  "auto" (default): enabled iff the
-    #   measured admission/execute overlap ratio pays
-    #   (`controller.overlap_pays`) — ~1x on this repo's 2-core CPU
-    #   container where the "device" shares the host cores, ~2x when
-    #   execution is off-host (TPU), so auto resolves to off here and on
-    #   where it helps.  Explicit True/False pins it either way;
-    #   semantics are identical regardless (tested).
+    double_buffer: Union[bool, str] = AUTO  # back-compat alias for the
+    #   one-slot pipeline: explicit True/False pins ``pipeline_depth`` to
+    #   1/0 when that field is left "auto"; with both "auto" the depth
+    #   defaults below.  Reads of `runtime.double_buffer` stay valid
+    #   (derived: pipeline_depth >= 1); semantics are identical at every
+    #   depth (tested).
+    pipeline_depth: Union[int, str] = AUTO  # N-deep admission->probe->
+    #   prefetch->dispatch pipeline (DESIGN.md §15): up to N batches stay
+    #   dispatched-but-unblocked while the host stages the next rounds,
+    #   and each plan tenure prefetches its queued horizon's miss rows
+    #   into a staging buffer so steady-state batches pay only the
+    #   residual collective gather.  0 = the fully synchronous pre-ISSUE-9
+    #   loop.  "auto" (default): starts at 1 (the staging prefetch is pure
+    #   work elimination); the controller hill-climbs the depth and the
+    #   overlap calibration force-raises it where measured overlap pays.
     replan_every: Union[int, str] = AUTO  # cadence floor (rounds between
     #   replans); "auto": hill-climbed.  0 = feedback-only mode: replan
     #   solely on drift signals (overflow / miss-rate), never on cadence
@@ -220,7 +228,16 @@ class ServingRuntime:
         # a read-only serving table never needs refreshes between replans
         self.refresh_every = int(resolve_knob(cfg.refresh_every, 0))
         self.batch_requests = int(resolve_knob(cfg.batch_requests, 16))
-        self.double_buffer = bool(resolve_knob(cfg.double_buffer, False))
+        # pipeline depth precedence: an explicit depth wins; else an
+        # explicit legacy double_buffer maps to 1/0; else auto (depth 1 —
+        # the staging prefetch is work elimination, on by default)
+        if not is_auto(cfg.pipeline_depth):
+            self.pipeline_depth = int(cfg.pipeline_depth)
+        elif not is_auto(cfg.double_buffer):
+            self.pipeline_depth = 1 if cfg.double_buffer else 0
+        else:
+            self.pipeline_depth = 1
+            self._auto.add("pipeline_depth")
         self._ctl: Optional[OnlineController] = None
         if cfg.managed and self._auto - {"refresh_every", "double_buffer"}:
             knobs = []
@@ -239,6 +256,15 @@ class ServingRuntime:
                 ladder = pow2_ladder(8, 256)
                 knobs.append(Knob("batch_requests", ladder,
                                   index=ladder.index(self.batch_requests)))
+            if "pipeline_depth" in self._auto:
+                # the lookup is exact at every depth (the pipeline only
+                # moves blocking and staging traffic), so the hill-climb
+                # probes freely; `_calibrate_overlap` force-raises it
+                # through the same controller when measured overlap pays
+                ladder = (0, 1, 2, 4)
+                knobs.append(Knob("pipeline_depth", ladder,
+                                  index=ladder.index(self.pipeline_depth),
+                                  prefer_low=True))
             self._ctl = OnlineController(knobs, self.telemetry,
                                          seed=cfg.seed)
 
@@ -277,6 +303,21 @@ class ServingRuntime:
         self._cache_ids = None           # device copy (refresh input)
         self._cache_ids_np = None        # host copy (admission-time probe)
         self._cache_rows = None
+        # memoized probe LUTs, rebuilt once per cache generation (the
+        # per-batch probe then never re-sorts the cache side)
+        self._probe_view: Optional[CacheProbeView] = None
+        # staged prefetch (pipeline_depth >= 1): the tenure's predicted
+        # miss rows, gathered once per replan/refresh instead of riding
+        # every batch's collective
+        self._staged_ids: Optional[np.ndarray] = None   # host, sorted asc
+        self._staged_ids_dev = None      # V-padded device ids (re-gather)
+        self._staging_rows = None        # (S, D) device rows
+        self._cache_ext = None           # (C+S, D) cache ++ staging concat
+        # accrual top-up state (one tenure's scope): per-id residual-miss
+        # counts and the ids that crossed the recurrence threshold since
+        # the last merge — see `_note_residual`
+        self._miss_counts: Optional[np.ndarray] = None
+        self._stage_pending: List[np.ndarray] = []
         self._pending_replan = False     # e.g. an out-of-band resize
         # lifetime round clock: `run()` can be called repeatedly on one
         # runtime (resize segments, drain calls) and the planner's rate
@@ -315,6 +356,20 @@ class ServingRuntime:
             self._managed_fns[route_cap] = fn
         return fn
 
+    @property
+    def double_buffer(self) -> bool:
+        """Back-compat view of the pipeline: any depth >= 1 overlaps
+        admission with execution (the old one-slot semantics)."""
+        return self.pipeline_depth >= 1
+
+    @staticmethod
+    def _overlap_backend_ok() -> bool:
+        """Overlap only buys parallelism when execution is genuinely
+        off-host: on the CPU backend the "device" IS the host cores, so
+        deeper pipelining adds contention (measured ~0.98x at a ~1.25x
+        predicted ratio) — same backend gate as the kernel autotuner."""
+        return jax.default_backend() != "cpu"
+
     # ----------------------------------------------------------- control
     def current_knobs(self) -> Dict[str, object]:
         """The live knob values (auto knobs: wherever the controller has
@@ -323,7 +378,8 @@ class ServingRuntime:
                 "replan_every": self.replan_every,
                 "refresh_every": self.refresh_every,
                 "batch_requests": self.batch_requests,
-                "double_buffer": self.double_buffer}
+                "double_buffer": self.double_buffer,
+                "pipeline_depth": self.pipeline_depth}
 
     def _calibrate_overlap(self) -> None:
         """One-shot overlap calibration for double-buffered admission:
@@ -376,17 +432,18 @@ class ServingRuntime:
             self.telemetry.set("serve.overlap_ratio", self.overlap_ratio)
             self.telemetry.set("serve.overlap_host_ms", th * 1e3)
             self.telemetry.set("serve.overlap_device_ms", td * 1e3)
-            # the ratio predicts the pipeline win only when execution is
-            # genuinely off-host: on the CPU backend the "device" IS the
-            # host cores, so overlap adds contention, not parallelism
-            # (measured ~0.98x win at a ~1.25x predicted ratio) — same
-            # backend gate as the kernel autotuner's measured mode
-            if "double_buffer" in self._auto \
-                    and jax.default_backend() != "cpu" \
+            # the measured-overlap force goes through the controller's
+            # `force_at_least` — the ONE ctl.force emitter, so every
+            # forced move carries the same event schema (knob/value/
+            # cause/target) and `obs/report.py`'s knob timeline renders
+            # it alongside the demand-steered forces
+            if "pipeline_depth" in self._auto and self._ctl is not None \
+                    and self._overlap_backend_ok() \
                     and overlap_pays(self.overlap_ratio):
-                self.double_buffer = True
-                self.telemetry.event("ctl.force", knob="double_buffer",
-                                     value=True, cause="overlap")
+                v = self._ctl.force_at_least("pipeline_depth", 2,
+                                             cause="overlap")
+                if v is not None:
+                    self.pipeline_depth = int(v)
         except Exception as e:       # pragma: no cover — never block a run
             self.telemetry.event("serve.overlap_calibration_skipped",
                                  error=repr(e))
@@ -475,6 +532,9 @@ class ServingRuntime:
             self._set_batch_requests(int(v))
         elif name == "refresh_every":
             self.refresh_every = int(v)
+        elif name == "pipeline_depth":
+            self.pipeline_depth = int(v)
+            self.telemetry.set("serve.pipeline_depth", v)
 
     # ---------------------------------------------------------------- plan
     def _replan(self, rnd: int, res: ServeResult, cause: str) -> None:
@@ -511,7 +571,24 @@ class ServingRuntime:
         else:
             self._cache_ids_np = self.plan.cache_ids
             self._cache_ids = jnp.asarray(self.plan.cache_ids)
+            # new cache generation: rebuild the memoized probe LUTs once
+            # (the per-batch probe never re-sorts the cache side again)
+            self._probe_view = CacheProbeView(self._cache_ids_np,
+                                              self.cfg.vocab)
+            self._staged_ids = None      # rebuilt below for the new tenure
             self._refresh(res)
+        # per-tenure staged prefetch (DESIGN.md §15): the snapshot's
+        # queued-horizon keys the new plan does NOT cache are exactly this
+        # tenure's predicted miss set — gather them once into the staging
+        # buffer so steady-state batches skip the per-batch collective
+        if self.pipeline_depth >= 1:
+            with self.tracer.span("prefetch.stage", a=rnd):
+                self._stage(keys)
+        else:
+            self._staged_ids = None
+            self._staged_ids_dev = None
+            self._staging_rows = None
+            self._cache_ext = None
         self._pending_replan = False
         res.replans += 1
         res.replan_rounds.append(rnd)
@@ -532,6 +609,118 @@ class ServingRuntime:
                 knobs=self.current_knobs(), capacity=self.cache_capacity,
                 miss_capacity=self.plan.miss_capacity)
 
+    def _stage(self, keys: np.ndarray) -> None:
+        """Build the tenure's staging buffer: the queued-horizon keys the
+        active plan left uncached AND that recur in the horizon, gathered
+        once (locally on the emulated backend — the same cost-model rule
+        as the replica refresh; the routed owner-block gather on the
+        mesh).  The multiplicity >= 2 gate is the work-elimination
+        break-even: a key queued once costs the staging gather exactly
+        the one per-batch gather it saves, so prefetching it is pure
+        overhead — only recurring misses amortize (a key queued k times
+        saves k gathers for one staging row).  Singletons ride the
+        residual collective instead; correctness is unaffected either
+        way (both paths read the same table rows)."""
+        uniq, counts = np.unique(np.asarray(keys, np.int64),
+                                 return_counts=True)
+        staged = np.setdiff1d(uniq[counts >= 2],
+                              np.asarray(self.plan.cache_ids, np.int64))
+        # new tenure: the accrual counts and pending top-ups scope to one
+        # staging generation (the cache/staged split they counted against
+        # just changed)
+        if self._miss_counts is None:
+            self._miss_counts = np.zeros(self.cfg.vocab, np.int32)
+        else:
+            self._miss_counts[:] = 0
+        self._stage_pending = []
+        if staged.size == 0:
+            self._staged_ids = None
+            self._staged_ids_dev = None
+            self._staging_rows = None
+            self._cache_ext = None
+            return
+        self._install_staging(staged)
+
+    def _install_staging(self, staged: np.ndarray) -> None:
+        """(Re)build the staging buffer for ``staged`` (sorted unique
+        ascending), reusing already-gathered rows where possible: rows
+        present in the current buffer are copied device-side; only the
+        genuinely new ids are gathered from the table (`refresh_rows` —
+        the replica-sync cost rule: a local gather, NOT the per-shard
+        collective the residual path pays)."""
+        # pow2 bucket with V-pads: static shapes for the jit cache; the
+        # pads gather zero rows no probe slot ever points at
+        n = max(64, 1 << (int(staged.size) - 1).bit_length())
+        ids_p = np.full(n, self.cfg.vocab, np.int32)
+        ids_p[:staged.size] = staged
+        old = self._staged_ids
+        if old is not None and old.size:
+            pos = np.searchsorted(old, staged)
+            posc = np.minimum(pos, old.size - 1)
+            reuse = old[posc] == staged
+            new_ids = staged[~reuse]
+        else:
+            reuse = np.zeros(staged.size, bool)
+            new_ids = staged
+        if old is None or new_ids.size == staged.size:
+            self._staging_rows = resolve(self.backend).refresh_rows(
+                self.table, jnp.asarray(ids_p))
+        else:
+            # merge: one local gather of the new rows + one take over the
+            # concatenated (old ++ new ++ zero) source — pads read the
+            # zero row, reused rows copy device-side without re-gathering
+            nn = max(8, 1 << max(0, int(new_ids.size) - 1).bit_length())
+            nids_p = np.full(nn, self.cfg.vocab, np.int32)
+            nids_p[:new_ids.size] = new_ids
+            new_rows = resolve(self.backend).refresh_rows(
+                self.table, jnp.asarray(nids_p))
+            # offsets index the DEVICE concat: the old buffer's padded
+            # row count, not the real staged-id count
+            off = int(self._staging_rows.shape[0])
+            src = np.full(n, off + nn, np.int32)            # pad: zero row
+            src[:staged.size] = np.where(
+                reuse, posc,
+                off + np.cumsum(~reuse) - 1).astype(np.int32)
+            zero = jnp.zeros((1, self.table.shape[1]),
+                             self._staging_rows.dtype)
+            self._staging_rows = jnp.take(
+                jnp.concatenate([self._staging_rows, new_rows, zero]),
+                jnp.asarray(src), axis=0)
+        self._staged_ids = staged
+        self._staged_ids_dev = jnp.asarray(ids_p)
+        # the fold-in concat the staged dispatch reads: staged miss slots
+        # address rows [C, C+S) of this buffer (one per-tenure concat in
+        # place of per-round staging gathers/masks on the device)
+        self._cache_ext = jnp.concatenate([self._cache_rows,
+                                           self._staging_rows])
+        self.telemetry.set("serve.staged_rows", int(staged.size))
+
+    def _note_residual(self, res_ids: np.ndarray) -> None:
+        """Accrual top-up (DESIGN.md §15): count this batch's residual
+        misses against the tenure, and once an id has missed the staging
+        buffer twice — proven recurring intent the replan snapshot never
+        saw (it arrived after the snapshot) — fold it into the staging
+        buffer so its later recurrences read locally instead of riding
+        the per-shard collective again.  Merges are batched (>= 64 ids)
+        to amortize the buffer rebuild; the same multiplicity >= 2
+        break-even as the snapshot gate, applied online."""
+        if res_ids.size == 0 or self._miss_counts is None:
+            return
+        self._miss_counts[res_ids] += 1
+        crossed = res_ids[self._miss_counts[res_ids] == 2]
+        if crossed.size:
+            self._stage_pending.append(crossed)
+        pending = sum(a.size for a in self._stage_pending)
+        if pending < 64:
+            return
+        new_ids = np.concatenate(self._stage_pending)
+        self._stage_pending = []
+        base = (self._staged_ids if self._staged_ids is not None
+                else np.empty(0, np.int64))
+        self._install_staging(np.union1d(base, new_ids))
+        self.telemetry.inc("serve.stage_topups")
+        self.telemetry.inc("serve.stage_topup_rows", int(new_ids.size))
+
     def _refresh(self, res: ServeResult) -> None:
         # eager on purpose (emulated): the XLA CPU backend lowers the
         # jitted clip+gather+mask into a far slower fused gather than the
@@ -540,6 +729,14 @@ class ServingRuntime:
         # all-gather shard_map, eager too
         self._cache_rows = resolve(self.backend).refresh_rows(
             self.table, self._cache_ids)
+        if self._staged_ids is not None:
+            # the staging buffer obeys the same staleness bound as the
+            # replica cache: re-gathered on every refresh round, so an
+            # out-of-band table update reaches staged rows within one
+            self._staging_rows = resolve(self.backend).refresh_rows(
+                self.table, self._staged_ids_dev)
+            self._cache_ext = jnp.concatenate([self._cache_rows,
+                                               self._staging_rows])
         res.refreshes += 1
         self.telemetry.inc("serve.refreshes")
 
@@ -576,7 +773,9 @@ class ServingRuntime:
         res = ServeResult()
         drift = False
         last_replan = -10 ** 9
-        inflight: Optional[_InFlight] = None
+        # N-deep pipeline: dispatched-but-unblocked batches, oldest first;
+        # depth 0 drains immediately (the serial loop, bitwise)
+        inflight: deque = deque()
         tr = self.tracer
 
         def finish(fl: _InFlight) -> None:
@@ -622,9 +821,8 @@ class ServingRuntime:
                     time.perf_counter())
             if rnd == measure_from:
                 # drain the pipeline before the measurement window opens
-                if inflight is not None:
-                    finish(inflight)
-                    inflight = None
+                while inflight:
+                    finish(inflight.popleft())
                 self.scheduler.latency.reset()
                 self.scheduler.n_served = 0
                 self._epoch_t0 = None
@@ -662,9 +860,8 @@ class ServingRuntime:
             if batch is None or (cfg.managed and self.plan is None):
                 if batch is not None:        # nothing planned yet: put back
                     self.queue.requeue(batch.reqs)
-                if inflight is not None:     # idle round: drain the slot
-                    finish(inflight)
-                    inflight = None
+                while inflight:              # idle round: drain the pipe
+                    finish(inflight.popleft())
                 continue
 
             if cfg.managed:
@@ -678,22 +875,87 @@ class ServingRuntime:
                                  self.plan.miss_capacity)
                              if self._owner_shards else 0)
                 with tr.span("serve.probe", a=rnd):
-                    probe = probe_host(self._cache_ids_np,
-                                       batch.tokens.reshape(B * K),
-                                       self.plan.miss_capacity,
-                                       owner_shards=self._owner_shards,
-                                       route_capacity=route_cap,
-                                       vocab=cfg.vocab)
+                    # memoized LUT probe — byte-identical to `probe_host`
+                    # on this cache generation (tests/test_prefetch.py)
+                    probe = self._probe_view.probe(
+                        batch.tokens.reshape(B * K),
+                        self.plan.miss_capacity,
+                        owner_shards=self._owner_shards,
+                        route_capacity=route_cap)
+                staged_split = None
+                if (self.pipeline_depth >= 1
+                        and self._staged_ids is not None):
+                    # fold the staging buffer into the cache side: staged
+                    # miss tokens become extended-cache hits (slot C+pos
+                    # into the per-tenure ``cache_rows ++ staging_rows``
+                    # concat) and only the residual bucket rides the
+                    # collective — the device path is then the PLAIN
+                    # managed lookup over a smaller miss buffer, with no
+                    # extra gathers or masks per round.  All host-side
+                    # numpy on the compact (M,) slots plus three (T,)
+                    # LUT reads; bookkeeping below (miss rate, overflow,
+                    # zero-served) stays on the raw probe, so semantics
+                    # are bitwise the sequential loop's (tested).
+                    C = self._cache_rows.shape[0]
+                    M = probe.buf_ids.shape[0]
+                    nm = min(probe.n_miss, M)
+                    ids = probe.buf_ids[:nm]
+                    pos = np.searchsorted(self._staged_ids, ids)
+                    posc = np.minimum(pos, self._staged_ids.size - 1)
+                    stg = self._staged_ids[posc] == ids
+                    n_res = int(nm - np.count_nonzero(stg))
+                    r_cap = max(8, 1 << max(0, n_res - 1).bit_length())
+                    res_ids = np.full(r_cap, cfg.vocab, np.int32)
+                    res_ids[:n_res] = ids[~stg]
+                    # per-slot LUTs: extended-cache slot for staged slots,
+                    # residual rank otherwise (pads + trash -> the
+                    # residual trash row r_cap)
+                    ext_lut = np.zeros(M + 1, np.int32)
+                    ext_lut[:nm] = np.where(stg, C + posc, 0)
+                    res_lut = np.full(M + 1, r_cap, np.int32)
+                    res_lut[:nm] = np.where(
+                        stg, r_cap, np.cumsum(~stg) - 1).astype(np.int32)
+                    stg_lut = np.zeros(M + 1, bool)
+                    stg_lut[:nm] = stg
+                    staged_tok = stg_lut[probe.buf_slot]
+                    staged_split = (res_ids, staged_tok, ext_lut,
+                                    res_lut, n_res)
+                    n_hits = int(np.count_nonzero(stg))
+                    self.telemetry.inc("serve.prefetch_hits", n_hits)
+                    self.telemetry.inc("serve.prefetch_stale", n_res)
+                    if self.attribution is not None:
+                        self.attribution.note_prefetch(n_hits, n_res)
+                    self._note_residual(ids[~stg])
+                elif self.pipeline_depth >= 1 and self.plan is not None:
+                    # no staging buffer this tenure: every miss is
+                    # residual — accrue so the buffer can bootstrap the
+                    # moment recurring intent shows up
+                    nm = min(probe.n_miss, probe.buf_ids.shape[0])
+                    self._note_residual(probe.buf_ids[:nm])
                 with tr.span("serve.dispatch", a=rnd):
                     # one packed H2D transfer for the three (T,) index
                     # arrays
-                    idx = jnp.asarray(np.stack([
-                        probe.hit.astype(np.int32), probe.cache_slot,
-                        probe.buf_slot]))
-                    out = self._managed_fn(route_cap)(
-                        self.table, self._cache_rows,
-                        jnp.asarray(probe.buf_ids), idx[0], idx[1], idx[2],
-                        jnp.int32(probe.n_miss))
+                    if staged_split is not None:
+                        res_ids, staged_tok, ext_lut, res_lut, n_res = \
+                            staged_split
+                        idx = jnp.asarray(np.stack([
+                            (probe.hit | staged_tok).astype(np.int32),
+                            np.where(staged_tok,
+                                     ext_lut[probe.buf_slot],
+                                     probe.cache_slot),
+                            res_lut[probe.buf_slot]]))
+                        out = self._managed_fn(route_cap)(
+                            self.table, self._cache_ext,
+                            jnp.asarray(res_ids), idx[0], idx[1],
+                            idx[2], jnp.int32(n_res))
+                    else:
+                        idx = jnp.asarray(np.stack([
+                            probe.hit.astype(np.int32), probe.cache_slot,
+                            probe.buf_slot]))
+                        out = self._managed_fn(route_cap)(
+                            self.table, self._cache_rows,
+                            jnp.asarray(probe.buf_ids), idx[0], idx[1],
+                            idx[2], jnp.int32(probe.n_miss))
                 hit_h = probe.hit.reshape(B, K)
                 over_h = probe.overflow.reshape(B, K)
                 nv = len(batch.reqs)
@@ -748,16 +1010,14 @@ class ServingRuntime:
                 served_mask = np.ones(len(batch.reqs), bool)
                 served = batch.reqs
 
-            # one-slot pipeline: the previous batch is blocked only AFTER
-            # this round's host work (probe + dispatch above) — while that
-            # happened, the device was executing it
-            prev, inflight = inflight, _InFlight(
-                out, batch.reqs, served, served_mask, batch.tokens.shape)
-            if prev is not None:
-                finish(prev)
-            if not self.double_buffer:
-                finish(inflight)
-                inflight = None
+            # N-deep pipeline: older batches are blocked only AFTER this
+            # round's host work (probe + staging split + dispatch above)
+            # — while that happened, the device was executing them.  At
+            # depth 0 the batch drains immediately (the serial loop)
+            inflight.append(_InFlight(
+                out, batch.reqs, served, served_mask, batch.tokens.shape))
+            while len(inflight) > self.pipeline_depth:
+                finish(inflight.popleft())
             self.telemetry.observe(
                 "serve.round_ms", (time.perf_counter() - rnd_t0) * 1e3)
             if tr.enabled:
@@ -767,8 +1027,8 @@ class ServingRuntime:
                 tr.record("serve.round", int(rnd_t0 * 1e9), tr.now_ns(),
                           a=rnd)
 
-        if inflight is not None:             # drain the pipeline
-            finish(inflight)
+        while inflight:                      # drain the pipeline
+            finish(inflight.popleft())
         self._lifetime_rounds += rounds
         res.wall_s = time.perf_counter() - t0
         res.throughput_rps = self.scheduler.n_served / max(res.wall_s, 1e-9)

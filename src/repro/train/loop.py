@@ -38,6 +38,8 @@ from __future__ import annotations
 
 import os
 import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Union
 
@@ -86,6 +88,17 @@ class LoopConfig:
     #                                  "auto": hill-climbed on measured
     #                                  loss-drop/s (starts at 1, the old
     #                                  hand-set default)
+    pipeline_depth: Union[int, str] = AUTO  # prefetch pipeline (DESIGN.md
+    #                                  §15): 0 = fully synchronous (the
+    #                                  pre-ISSUE-9 loop, bitwise); >= 1
+    #                                  defers loss blocking up to that
+    #                                  many steps, runs the planner one
+    #                                  replan round ahead in a background
+    #                                  thread, and switches eligible
+    #                                  refresh rounds to the delta
+    #                                  re-gather of only the rows touched
+    #                                  since the last sync.  "auto":
+    #                                  starts at 1, hill-climbed
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 0
     init_from: Optional[str] = None  # checkpoint dir to restore from
@@ -153,11 +166,13 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig,
 
     # ---- knob resolution: "auto" fields belong to the controller
     auto = {name for name, v in (("cache_capacity", lc.cache_capacity),
-                                 ("refresh_every", lc.refresh_every))
+                                 ("refresh_every", lc.refresh_every),
+                                 ("pipeline_depth", lc.pipeline_depth))
             if is_auto(v)}
     cap_ladder = capacity_ladder(cfg.vocab_size)
     cache_capacity = int(resolve_knob(lc.cache_capacity, cap_ladder[0]))
     refresh_every = int(resolve_knob(lc.refresh_every, 1))
+    pipeline_depth = int(resolve_knob(lc.pipeline_depth, 1))
     ctl: Optional[OnlineController] = None
     if lc.pm and auto:
         knobs = []
@@ -172,6 +187,14 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig,
             ladder = (0, 1, 2, 4, 8)
             knobs.append(Knob("refresh_every", ladder,
                               index=ladder.index(refresh_every),
+                              prefer_low=True))
+        if "pipeline_depth" in auto:
+            # the lookup is exact at every depth (the pipeline only moves
+            # blocking and refresh traffic), so the hill-climb can probe
+            # freely on the loss-drop/s reward
+            ladder = (0, 1, 2, 4)
+            knobs.append(Knob("pipeline_depth", ladder,
+                              index=ladder.index(pipeline_depth),
                               prefer_low=True))
         ctl = OnlineController(knobs, bus, seed=lc.seed)
 
@@ -217,6 +240,52 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig,
     epoch_t0: Optional[float] = None
     epoch_loss: Optional[float] = None
 
+    # ---- prefetch pipeline state (DESIGN.md §15)
+    # deferred loss blocking: the device queue holds up to pipeline_depth
+    # dispatched-but-unread steps; draining preserves the synchronous
+    # loop's exact per-step ordering of losses/telemetry/logs
+    pending: deque = deque()   # (step, loss_device, step_t0)
+
+    def drain(limit: int) -> None:
+        while len(pending) > limit:
+            s, loss_d, t0s = pending.popleft()
+            _t = tr.now_ns() if tr.enabled else 0
+            loss_f = float(loss_d)          # blocks on the device queue
+            if tr.enabled:
+                tr.record("prefetch.drain", _t, tr.now_ns(), a=s)
+            res.losses.append(loss_f)
+            bus.set("train.loss", loss_f)
+            bus.observe("train.step_ms",
+                        (time.perf_counter() - t0s) * 1e3)
+            if lc.log_every and s % lc.log_every == 0:
+                print(f"step {s:5d}  loss {loss_f:.4f}")
+
+    # background plan-ahead: ONE worker builds the next boundary's plan
+    # candidate off the already-signaled window while steps run; windows
+    # are computed on the main thread (`plan_window`) and candidates only
+    # become plans through `adopt`'s window-equality check
+    executor = ThreadPoolExecutor(max_workers=1) \
+        if planner is not None else None
+    pending_plan = None        # (future, target_step, window)
+    last_plan_step = -1
+    # delta refresh: union of table rows the steps since the last sync
+    # actually updated (the loader's signaled ids — exact for the sparse
+    # and dense AdaGrad paths; see the refresh gate below)
+    touched = np.zeros(0, dtype=np.int64)
+    touched_known = True
+    delta_refresh = None
+    if lc.pm:
+        from repro.pm.collectives import resolve
+        delta_refresh = jax.jit(resolve(backend).refresh_rows_delta,
+                                donate_argnums=(1,))
+    # delta refresh is exact only when untouched rows are bitwise frozen
+    # between syncs: sparse/dense AdaGrad leaves zero-grad rows unchanged
+    # (acc + 0^2 == acc, p - lr*0 == p), but tied embeddings take dense
+    # head gradients on every row and momentum-style optimizers decay
+    # untouched rows' state — those always take the full re-gather
+    delta_exact = (lc.optimizer == "adagrad"
+                   and not getattr(cfg, "tie_embeddings", False))
+
     it = iter(loader)
     while True:
         # the loader's __next__ IS the intent-signaling phase: pulling a
@@ -236,6 +305,10 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig,
             replanned = False
             if planner.should_replan(step, plan):
                 _t_plan = tr.now_ns() if tr.enabled else 0
+                # the controller's reward reads the epoch's losses — the
+                # deferred tail must land in res.losses first, exactly as
+                # the synchronous loop would have blocked step by step
+                drain(0)
                 # measured hill-climb decision at the boundary: reward is
                 # the epoch's loss-drop per second (convergence rate)
                 now = time.perf_counter()
@@ -248,11 +321,27 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig,
                         for name, v in ctl.observe(reward).items():
                             if name == "refresh_every":
                                 refresh_every = int(v)
+                            elif name == "pipeline_depth":
+                                pipeline_depth = int(v)
                     epoch_loss = cur
                 elif ctl is not None and res.losses:
                     epoch_loss = float(np.mean(res.losses[-lc.plan_every:]))
                 epoch_t0 = now
-                plan = planner.plan(step)
+                # plan-ahead adoption: the background candidate becomes
+                # the plan iff it covers exactly the window a synchronous
+                # build would — otherwise (horizon moved under it) fall
+                # back to building here, bitwise the pre-pipeline path
+                cand = None
+                if pending_plan is not None:
+                    cand = pending_plan[0].result()
+                    pending_plan = None
+                plan = planner.adopt(cand, step)
+                if plan is not None:
+                    bus.inc("train.prefetch_plan_hits")
+                else:
+                    if cand is not None:
+                        bus.inc("train.prefetch_plan_misses")
+                    plan = planner.plan(step)
                 if ctl is not None and "cache_capacity" in auto:
                     # intent-signal capacity steering: the window's demand
                     # count IS the bucket; a changed bucket re-plans over
@@ -271,6 +360,7 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig,
                 res.plans += 1
                 bus.inc("train.plans")
                 replanned = True
+                last_plan_step = step
                 planner.gc(step)
                 if tr.enabled:
                     tr.record("train.plan", _t_plan, tr.now_ns(), a=step)
@@ -281,9 +371,42 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig,
             if replanned or cache_rows is None or (
                     refresh_every > 0
                     and step % refresh_every == 0):
-                with tr.span("train.refresh", a=step):
-                    state = make_state(params["embed"], cache_ids, backend)
-                    cache_rows = state.cache_rows
+                # delta refresh (pipeline on, same plan, exact-update
+                # optimizer, touched set known): re-gather only the
+                # cache rows the steps since the last sync updated and
+                # scatter them into the DONATED previous cache buffer.
+                # Bitwise the full re-gather — untouched rows are frozen
+                # in the table between syncs (see delta_exact above)
+                ids = None
+                if (pipeline_depth >= 1 and not replanned
+                        and cache_rows is not None and touched_known
+                        and delta_exact):
+                    ids = np.intersect1d(
+                        touched, np.asarray(plan.cache_ids, np.int64))
+                    n = max(64, 1 << (int(ids.size) - 1).bit_length()) \
+                        if ids.size else 64
+                    if n >= plan.cache_ids.shape[0]:
+                        ids = None       # near-full delta: one gather wins
+                if ids is not None:
+                    C = plan.cache_ids.shape[0]
+                    slots = np.searchsorted(
+                        np.asarray(plan.cache_ids, np.int64), ids)
+                    ids_p = np.full(n, cfg.vocab_size, np.int32)
+                    ids_p[:ids.size] = ids
+                    slots_p = np.full(n, C, np.int32)
+                    slots_p[:ids.size] = slots
+                    with tr.span("prefetch.refresh", a=step):
+                        cache_rows = delta_refresh(
+                            params["embed"], cache_rows,
+                            jnp.asarray(ids_p), jnp.asarray(slots_p))
+                    bus.inc("train.delta_refreshes")
+                else:
+                    with tr.span("train.refresh", a=step):
+                        state = make_state(params["embed"], cache_ids,
+                                           backend)
+                        cache_rows = state.cache_rows
+                touched = np.zeros(0, dtype=np.int64)
+                touched_known = True
                 res.refreshes += 1
                 bus.inc("train.refreshes")
             batch = dict(batch,
@@ -299,26 +422,57 @@ def train_loop(cfg: ModelConfig, lc: LoopConfig,
                 if n_miss > plan.miss_capacity:
                     res.overflows += 1
                     bus.inc("train.overflows")
+                # the step's unique ids are exactly the table rows its
+                # optimizer update touches — the delta-refresh work set
+                touched = np.union1d(touched, uniq.astype(np.int64))
+            else:
+                touched_known = False
             fn = step_fn(plan.miss_capacity)
+            # plan-ahead submission: the earliest possible next boundary
+            # is min(last boundary + plan_every, window end); one step
+            # before it, hand the worker the window to build against.
+            # A candidate whose predicted boundary slipped (the horizon
+            # test deferred the replan) is discarded and resubmitted.
+            if (executor is not None and pipeline_depth >= 1
+                    and plan is not None):
+                if pending_plan is not None and pending_plan[1] <= step:
+                    pending_plan[0].result()
+                    pending_plan = None
+                t_pred = min(last_plan_step + lc.plan_every,
+                             plan.window[1])
+                if pending_plan is None and step == t_pred - 1:
+                    window = planner.plan_window(t_pred)
+                    fut = executor.submit(planner.plan_candidate, window)
+                    pending_plan = (fut, t_pred, window)
+                    if tr.enabled:
+                        _t = tr.now_ns()
+                        tr.record("prefetch.plan", _t, _t, a=t_pred)
         else:
             fn = step_fn(0)
         with tr.span("train.step", a=step):
             loss, params, opt_state = fn(params, opt_state, batch)
-            loss_f = float(loss)   # blocks: the span covers real step time
-        res.losses.append(loss_f)
-        bus.set("train.loss", loss_f)
-        bus.observe("train.step_ms",
-                    (time.perf_counter() - step_t0) * 1e3)
-        if lc.log_every and step % lc.log_every == 0:
-            print(f"step {step:5d}  loss {loss_f:.4f}")
+            if pipeline_depth == 0:
+                # blocks: the span covers real step time (the synchronous
+                # contract); at depth >= 1 the block moves to drain()
+                loss = float(loss)
+        pending.append((step, loss, step_t0))
+        drain(pipeline_depth)
         if lc.ckpt_dir and lc.ckpt_every and step and \
                 step % lc.ckpt_every == 0:
             checkpoint.save(f"{lc.ckpt_dir}/step_{step:07d}",
                             {"params": params, "opt": opt_state}, step)
 
+    drain(0)
+    if pending_plan is not None:
+        pending_plan[0].result()
+        pending_plan = None
+    if executor is not None:
+        executor.shutdown(wait=True)
+
     res.recompiles = len(step_fns)
     res.wall_s = time.time() - t0
     res.knobs = {"cache_capacity": cache_capacity,
                  "refresh_every": refresh_every,
+                 "pipeline_depth": pipeline_depth,
                  "plan_every": lc.plan_every}
     return res
